@@ -1,0 +1,81 @@
+"""Shared benchmark machinery.
+
+Pairing convention (paper Secs. VI-VII):
+  * SHARP baseline        : Min-KS + EVF on BSGS(bs=4) programs
+  * SHARP w. hoisting     : hoist + EVF on BSGS programs (Fig. 5/14 col 2)
+  * SHARP-xMU             : hoist + IRF on BSGS programs (col 3)
+  * HE2-SM (hoisting)     : hoist + IRF on BSGS programs (col 4)
+  * HE2-SM (HERO)         : hoist + fusion + IRF on BSGS-disabled programs
+                            (HERO's BSGS explorer disables BSGS when the
+                            8 GB HBM holds the evk set — Sec. IV-C)
+  * HE2-LM (HERO, hybrid) : + hybrid dataflow + INTT-Resident (cols 6-7)
+"""
+from __future__ import annotations
+
+from repro.dfg.programs import (
+    bert_dfg, bootstrapping_dfg, helr_dfg, resnet_dfg,
+)
+from repro.sim import HE2_LM, HE2_SM, SHARP, SHARP_XMU
+from repro.sim.engine import SimResult, simulate_program
+
+BS_BASE = 4   # SHARP's baseline baby-step (Fig. 7(a))
+
+
+def programs_for(bench: str, bsgs: bool):
+    bs = BS_BASE if bsgs else 0
+    if bench == "bootstrapping":
+        return bootstrapping_dfg(bsgs_bs=bs).g
+    if bench == "helr":
+        return helr_dfg(bsgs_bs=bs).g
+    if bench == "resnet20":
+        return resnet_dfg(20, bsgs_bs=bs).g
+    if bench == "resnet56":
+        return resnet_dfg(56, bsgs_bs=bs).g
+    if bench == "bert":
+        return bert_dfg(bsgs_bs=2 if bsgs else 2).g
+    raise KeyError(bench)
+
+
+BENCHES = ["bootstrapping", "helr", "resnet20", "resnet56"]
+
+# Paper Table IV reference latencies (ms) for validation.
+PAPER_LATENCY_MS = {
+    "bootstrapping": {"SHARP": 3.12, "HE2-SM": 1.42, "HE2-LM": 1.33},
+    "helr": {"SHARP": 2.53, "HE2-SM": 1.79, "HE2-LM": 1.70},
+    "resnet20": {"SHARP": 99.0, "HE2-SM": 69.7, "HE2-LM": 71.9},
+    "resnet56": {"SHARP": 337.0, "HE2-SM": 232.0, "HE2-LM": 240.0},
+}
+
+PAPER_EDP = {
+    "bootstrapping": {"SHARP": 0.94, "HE2-SM": 0.16, "HE2-LM": 0.13},
+    "helr": {"SHARP": 2.56, "HE2-SM": 0.87, "HE2-LM": 0.75},
+    "resnet20": {"SHARP": 648.0, "HE2-SM": 234.0, "HE2-LM": 219.0},
+    "resnet56": {"SHARP": 7510.0, "HE2-SM": 2600.0, "HE2-LM": 2430.0},
+}
+
+
+def run_stack(bench: str) -> dict[str, SimResult]:
+    g_bsgs = programs_for(bench, bsgs=True)
+    g_full = programs_for(bench, bsgs=False)
+    out = {}
+    out["SHARP"] = simulate_program(g_bsgs, SHARP, "minks", "EVF",
+                                    name="SHARP")
+    out["SHARP w.Hoist"] = simulate_program(g_bsgs, SHARP, "hoist", "EVF",
+                                            name="SHARP w.Hoist")
+    out["SHARP-xMU"] = simulate_program(g_bsgs, SHARP_XMU, "hoist", "IRF",
+                                        name="SHARP-xMU")
+    out["HE2-SM hoist"] = simulate_program(g_bsgs, HE2_SM, "hoist", "IRF",
+                                           name="HE2-SM hoist")
+    out["HE2-SM"] = simulate_program(g_full, HE2_SM, "hoist", "IRF",
+                                     fusion=True, name="HE2-SM")
+    out["HE2-LM"] = simulate_program(g_full, HE2_LM, "hoist", "hybrid",
+                                     fusion=True, name="HE2-LM")
+    return out
+
+
+def area_of(name: str) -> float:
+    return {
+        "SHARP": SHARP.area_mm2, "SHARP w.Hoist": SHARP.area_mm2,
+        "SHARP-xMU": SHARP_XMU.area_mm2, "HE2-SM hoist": HE2_SM.area_mm2,
+        "HE2-SM": HE2_SM.area_mm2, "HE2-LM": HE2_LM.area_mm2,
+    }[name]

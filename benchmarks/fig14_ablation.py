@@ -1,0 +1,54 @@
+"""Fig. 14 ablation chain: SHARP(minks) -> SHARP(hoist) -> SHARP-xMU ->
+HE2-SM(hoist) -> +HERO -> HE2-LM(hybrid) -> +INTT-Resident."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from benchmarks.common import programs_for
+from repro.sim import HE2_LM, HE2_SM, SHARP, SHARP_XMU
+from repro.sim.engine import simulate_program
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def run() -> list[str]:
+    RESULTS.mkdir(exist_ok=True)
+    lines, summary = [], {}
+    he2_sm_no_ir = dataclasses.replace(HE2_SM, intt_resident=False)
+    he2_lm_no_ir = dataclasses.replace(HE2_LM, intt_resident=False)
+    for bench in ["bootstrapping", "helr", "resnet20"]:
+        g_bsgs = programs_for(bench, bsgs=True)
+        g_full = programs_for(bench, bsgs=False)
+        cols = [
+            ("1_SHARP_minks", simulate_program(g_bsgs, SHARP, "minks", "EVF")),
+            ("2_SHARP_hoist", simulate_program(g_bsgs, SHARP, "hoist", "EVF")),
+            ("3_SHARP-xMU_IRF", simulate_program(g_bsgs, SHARP_XMU, "hoist",
+                                                 "IRF")),
+            ("4_HE2-SM_hoist", simulate_program(g_bsgs, he2_sm_no_ir,
+                                                "hoist", "IRF")),
+            ("5_HE2-SM_HERO", simulate_program(g_full, he2_sm_no_ir, "hoist",
+                                               "IRF", fusion=True)),
+            ("6_HE2-LM_hybrid", simulate_program(g_full, he2_lm_no_ir,
+                                                 "hoist", "hybrid",
+                                                 fusion=True)),
+            ("7_HE2-LM_+INTTres", simulate_program(g_full, HE2_LM, "hoist",
+                                                   "hybrid", fusion=True)),
+        ]
+        base = cols[0][1].latency_s
+        summary[bench] = {}
+        for name, r in cols:
+            summary[bench][name] = {
+                "latency_ms": r.latency_s * 1e3,
+                "norm": r.latency_s / base,
+                "comm_stall_frac": r.comm_stall_frac,
+                "mem_stall_frac": (r.mem_stall_s / r.latency_s
+                                   if r.latency_s else 0.0),
+            }
+            lines.append(
+                f"fig14/{bench}/{name},0.0,norm={r.latency_s/base:.3f};"
+                f"comm_stall={r.comm_stall_frac:.4f}"
+            )
+    (RESULTS / "fig14.json").write_text(json.dumps(summary, indent=2))
+    return lines

@@ -1,0 +1,62 @@
+"""Fig. 15: computation & communication volume under the algorithmic
+optimizations — Min-KS / Hoisting / Hoisting w/o BSGS / HERO (fusion)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import programs_for
+from repro.dfg.fusion import optimal_fusion
+from repro.dfg.hoist import program_volumes
+from repro.dfg.pkb import identify_pkbs
+from repro.sim import HE2_SM
+from repro.sim.engine import _pipeline_weights
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def _metrics(dfg, pkbs, strategy, dataflow="IRF"):
+    v = program_volumes(dfg, pkbs, 12, 12, strategy, dataflow)
+    return {
+        "compute_words": v.compute_words,
+        "comm_words": v.comm_words,
+        "evk_set_words": v.evk_set_words,
+        "modups": v.modup_count,
+        "moddowns": v.moddown_count,
+    }
+
+
+def run() -> list[str]:
+    RESULTS.mkdir(exist_ok=True)
+    lines, summary = [], {}
+    for bench in ["bootstrapping", "helr", "resnet20", "bert"]:
+        g_bsgs = programs_for(bench, bsgs=True)
+        g_full = programs_for(bench, bsgs=False)
+        pk_bsgs = identify_pkbs(g_bsgs)
+        pk_full = identify_pkbs(g_full)
+        plan = optimal_fusion(
+            pk_full, 12, 12, 1 << 15,
+            capacity_words=HE2_SM.evk_capacity_words(),
+            weights=_pipeline_weights(HE2_SM),
+        )
+        rows = {
+            "minks": _metrics(g_bsgs, pk_bsgs, "minks", "EVF"),
+            "hoisting": _metrics(g_bsgs, pk_bsgs, "hoist"),
+            "hoisting_no_bsgs": _metrics(g_full, pk_full, "hoist"),
+            "HERO": _metrics(g_full, plan.fused, "hoist"),
+        }
+        base = rows["minks"]
+        summary[bench] = rows
+        for name, m in rows.items():
+            comp_red = base["compute_words"] / max(m["compute_words"], 1)
+            comm_base = max(base["comm_words"], base["evk_set_words"], 1)
+            comm_red = comm_base / max(m["comm_words"] or m["evk_set_words"], 1)
+            summary[bench][name]["comp_reduction_vs_minks"] = comp_red
+            lines.append(
+                f"fig15/{bench}/{name},0.0,"
+                f"comp_words={m['compute_words']:.3e};"
+                f"comm_words={m['comm_words']:.3e};"
+                f"modups={m['modups']};comp_red={comp_red:.2f}x"
+            )
+    (RESULTS / "fig15.json").write_text(json.dumps(summary, indent=2))
+    return lines

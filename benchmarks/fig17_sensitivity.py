@@ -1,0 +1,39 @@
+"""Fig. 17: HE2 sensitivity to xMU HBM bandwidth and capacity."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import programs_for
+from repro.sim import HE2_SM, SHARP
+from repro.sim.engine import simulate_program
+from repro.sim.hw import with_bandwidth, with_capacity
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def run() -> list[str]:
+    RESULTS.mkdir(exist_ok=True)
+    lines, summary = [], {"bandwidth": {}, "capacity": {}}
+    g_full = programs_for("bootstrapping", bsgs=False)
+    g_bsgs = programs_for("bootstrapping", bsgs=True)
+    sharp = simulate_program(g_bsgs, SHARP, "minks", "EVF")
+    summary["sharp_ms"] = sharp.latency_s * 1e3
+
+    for bw in (0.25, 0.5, 1.0, 2.0, 4.0):
+        hw = with_bandwidth(HE2_SM, bw)
+        r = simulate_program(g_full, hw, "hoist", "IRF", fusion=True)
+        summary["bandwidth"][bw] = r.latency_s * 1e3
+        lines.append(
+            f"fig17/bw/{bw}TBs,0.0,lat_ms={r.latency_s*1e3:.3f};"
+            f"vs_sharp={sharp.latency_s/r.latency_s:.2f}x"
+        )
+    for cap in (2.0, 4.0, 8.0, 16.0):
+        hw = with_capacity(HE2_SM, cap)
+        r = simulate_program(g_full, hw, "hoist", "IRF", fusion=True)
+        summary["capacity"][cap] = r.latency_s * 1e3
+        lines.append(
+            f"fig17/cap/{cap}GB,0.0,lat_ms={r.latency_s*1e3:.3f}"
+        )
+    (RESULTS / "fig17.json").write_text(json.dumps(summary, indent=2))
+    return lines

@@ -1,0 +1,53 @@
+"""Fig. 6: PKB keyswitch-parallelism distribution, before/after HERO."""
+from __future__ import annotations
+
+import collections
+import json
+import pathlib
+
+from benchmarks.common import programs_for
+from repro.dfg.fusion import optimal_fusion
+from repro.dfg.pkb import identify_pkbs
+from repro.sim import HE2_SM
+from repro.sim.engine import _pipeline_weights
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def _bucket(ns):
+    c = collections.Counter()
+    for n in ns:
+        if n <= 1:
+            c["1"] += 1
+        elif n <= 10:
+            c["2-10"] += 1
+        elif n <= 30:
+            c["11-30"] += 1
+        else:
+            c[">30"] += 1
+    return dict(c)
+
+
+def run() -> list[str]:
+    RESULTS.mkdir(exist_ok=True)
+    lines, summary = [], {}
+    for bench in ["bootstrapping", "helr", "resnet20"]:
+        g_bsgs = programs_for(bench, bsgs=True)   # Min-KS/BSGS baseline
+        g_full = programs_for(bench, bsgs=False)
+        pk_b = identify_pkbs(g_bsgs)
+        pk_f = identify_pkbs(g_full)
+        plan = optimal_fusion(
+            pk_f, 12, 12, 1 << 15,
+            capacity_words=HE2_SM.evk_capacity_words(),
+            weights=_pipeline_weights(HE2_SM),
+        )
+        rows = {
+            "baseline_bsgs": _bucket([p.n_rot for p in pk_b]),
+            "no_bsgs": _bucket([p.n_rot for p in pk_f]),
+            "HERO_fused": _bucket([len(p.steps) for p in plan.fused]),
+        }
+        summary[bench] = rows
+        for name, hist in rows.items():
+            lines.append(f"fig6/{bench}/{name},0.0,{hist}")
+    (RESULTS / "fig6.json").write_text(json.dumps(summary, indent=2))
+    return lines

@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines and writes JSON results to
+benchmarks/results/ (consumed by EXPERIMENTS.md).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [table4|fig14|...|all]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig6_parallelism, fig7_bsgs, fig14_ablation, fig15_hero,
+        fig16_util, fig17_sensitivity, table1_ai, table4_end2end,
+    )
+
+    modules = {
+        "table1": table1_ai,
+        "table4": table4_end2end,
+        "fig6": fig6_parallelism,
+        "fig7": fig7_bsgs,
+        "fig14": fig14_ablation,
+        "fig15": fig15_hero,
+        "fig16": fig16_util,
+        "fig17": fig17_sensitivity,
+    }
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    selected = modules if which == "all" else {which: modules[which]}
+    print("name,us_per_call,derived")
+    for name, mod in selected.items():
+        t0 = time.time()
+        for line in mod.run():
+            print(line)
+        dt = time.time() - t0
+        print(f"{name}/_total,{dt*1e6:.0f},ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Table I: arithmetic intensity (ops/byte) of CKKS operators under the
+paper's parameters (N=2^16, L=35, k=alpha=12, dnum=3, 36-bit words)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.dfg.hoist import ip_volumes, moddown_volumes, modup_volumes
+from repro.sim.hw import WORD_BYTES
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+N, L, K, ALPHA = 1 << 16, 35, 12, 12
+PAPER_AI = {"ntt": 0.89, "bconv": 1.60, "modup": 3.38, "moddown": 2.92,
+            "ip": 0.12, "pmul": 0.09, "cadd": 0.07, "rescale": 0.11}
+
+
+def run() -> list[str]:
+    RESULTS.mkdir(exist_ok=True)
+    l = L + 1
+    ext = l + K
+    logn = 16
+    out = {}
+
+    # NTT: N log N butterflies (1 mul + 2 add) over N words in/out
+    ntt_ops = N * logn * 1.5
+    ntt_bytes = 2 * N * WORD_BYTES
+    out["ntt"] = ntt_ops / ntt_bytes / logn  # per-stage normalized
+
+    # BConv l -> k limbs: l*k MACs per coeff; reads l, writes k words
+    bconv_ops = ALPHA * K * N
+    bconv_bytes = (ALPHA + K) * N * WORD_BYTES
+    out["bconv"] = bconv_ops / bconv_bytes
+
+    mu = modup_volumes(l, K, ALPHA, N)
+    mu_bytes = (l + 3 * ext) * N * WORD_BYTES  # read digits, write ext
+    out["modup"] = (mu.ntt_words * 1.5 * logn / 16 + mu.bconv_macs) / mu_bytes
+
+    md = moddown_volumes(l, K, ALPHA, N, 2)
+    md_bytes = 2 * (ext + l) * N * WORD_BYTES
+    out["moddown"] = (md.ntt_words * 1.5 * logn / 16 + md.bconv_macs
+                      + md.xpu_ewo_words) / md_bytes
+
+    ipv = ip_volumes(l, K, ALPHA, N)
+    ip_bytes = (3 * ext + 3 * 2 * ext + 2 * ext) * N * WORD_BYTES
+    out["ip"] = ipv.ip_macs / ip_bytes
+
+    # EWOs: 1 op per word; read 2 (or 1+pt), write 1
+    out["pmul"] = 1.0 / (3 * WORD_BYTES)
+    out["cadd"] = 1.0 / (3 * WORD_BYTES)
+    out["rescale"] = 1.5 / (3 * WORD_BYTES)
+
+    (RESULTS / "table1_ai.json").write_text(json.dumps(
+        {"ours": out, "paper": PAPER_AI}, indent=2))
+    lines = []
+    for op, ai in out.items():
+        lines.append(
+            f"table1/{op},0.0,ai={ai:.3f};paper={PAPER_AI.get(op)};"
+            f"memops={'yes' if ai < 0.5 else 'no'}"
+        )
+    return lines

@@ -1,0 +1,53 @@
+"""Table IV: end-to-end latency / EDP / EDAP vs SHARP baseline."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from benchmarks.common import (
+    BENCHES, PAPER_LATENCY_MS, area_of, run_stack,
+)
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def run() -> list[str]:
+    RESULTS.mkdir(exist_ok=True)
+    lines = []
+    summary = {}
+    for bench in BENCHES:
+        t0 = time.time()
+        rows = run_stack(bench)
+        dt = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        for name, r in rows.items():
+            edap = r.edap(area_of(name))
+            paper = PAPER_LATENCY_MS[bench].get(name)
+            summary.setdefault(bench, {})[name] = {
+                "latency_ms": r.latency_s * 1e3,
+                "paper_latency_ms": paper,
+                "edp_jms": r.edp,
+                "edap": edap,
+                "comm_stall_frac": r.comm_stall_frac,
+                "mem_stall_frac": (r.mem_stall_s / r.latency_s
+                                   if r.latency_s else 0),
+            }
+            lines.append(
+                f"table4/{bench}/{name},{dt:.1f},"
+                f"lat_ms={r.latency_s*1e3:.3f};paper={paper};"
+                f"edp={r.edp:.3f};edap={edap:.1f};"
+                f"comm_stall={r.comm_stall_frac:.4f}"
+            )
+        sp_sm = rows["SHARP"].latency_s / rows["HE2-SM"].latency_s
+        sp_lm = rows["SHARP"].latency_s / rows["HE2-LM"].latency_s
+        edap_gain = (rows["SHARP"].edap(area_of("SHARP"))
+                     / rows["HE2-LM"].edap(area_of("HE2-LM")))
+        summary[bench]["speedup_sm"] = sp_sm
+        summary[bench]["speedup_lm"] = sp_lm
+        summary[bench]["edap_gain_lm"] = edap_gain
+        lines.append(
+            f"table4/{bench}/speedup,{dt:.1f},"
+            f"sm={sp_sm:.2f}x;lm={sp_lm:.2f}x;edap_gain={edap_gain:.2f}x"
+        )
+    (RESULTS / "table4.json").write_text(json.dumps(summary, indent=2))
+    return lines

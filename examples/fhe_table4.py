@@ -1,0 +1,24 @@
+"""Reproduce the paper's headline numbers (Table IV) from the simulator.
+
+Run: PYTHONPATH=src python examples/fhe_table4.py
+"""
+import sys
+sys.path.insert(0, ".")
+from benchmarks.common import run_stack, PAPER_LATENCY_MS, area_of  # noqa: E402
+
+
+def main():
+    for bench in ["bootstrapping", "helr", "resnet20", "resnet56"]:
+        rows = run_stack(bench)
+        print(f"--- {bench} ---")
+        for name in ("SHARP", "HE2-SM", "HE2-LM"):
+            r = rows[name]
+            print(f"  {name:8s} {r.latency_s*1e3:8.2f} ms "
+                  f"(paper {PAPER_LATENCY_MS[bench][name]}) "
+                  f"EDP {r.edp:.3f} EDAP {r.edap(area_of(name)):.1f}")
+        print(f"  speedup LM {rows['SHARP'].latency_s/rows['HE2-LM'].latency_s:.2f}x"
+              f" | comm stall {rows['HE2-LM'].comm_stall_frac*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

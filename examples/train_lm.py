@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+checkpointing + resume (deliverable (b)).
+
+Default runs a CPU-sized reduced model; pass --large for a ~100M config
+(slow on CPU — the shape the driver is designed for).
+
+Run: PYTHONPATH=src python examples/train_lm.py [--large] [--steps 200]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models.model import init_params
+from repro.train.optimizer import AdamW
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--large", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    if args.large:
+        # ~100M params: stablelm family scaled down
+        cfg = dataclasses.replace(
+            get_config("stablelm_3b"), n_layers=8, d_model=768,
+            n_heads=12, n_kv_heads=12, d_ff=2048, vocab=32768)
+        seq, batch = 512, 8
+    else:
+        cfg = reduced_config("stablelm_3b")
+        seq, batch = 64, 8
+    print(f"model: {cfg.n_params()/1e6:.1f}M params")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(PipelineConfig(vocab=cfg.vocab, seq_len=seq,
+                                        global_batch=batch))
+    tr = Trainer(cfg, TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                                    ckpt_dir="/tmp/repro_train_lm",
+                                    log_every=20),
+                 AdamW(lr=1e-3, warmup_steps=20))
+    _, _, losses = tr.run(params, pipe, resume=True)
+    print(f"loss: {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

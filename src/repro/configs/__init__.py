@@ -1,0 +1,23 @@
+"""Architecture config registry: one module per assigned architecture."""
+from repro.configs.base import ModelConfig, MoEConfig, MLAConfig  # noqa: F401
+
+
+def get_config(arch: str):
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def reduced_config(arch: str):
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.REDUCED
+
+
+ARCHS = [
+    "stablelm_3b", "minicpm3_4b", "phi3_medium_14b", "command_r_35b",
+    "arctic_480b", "moonshot_v1_16b_a3b", "jamba_1_5_large_398b",
+    "qwen2_vl_2b", "xlstm_1_3b", "whisper_base",
+]

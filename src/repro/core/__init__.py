@@ -1,0 +1,12 @@
+"""CKKS core: RNS polynomial arithmetic, scheme ops, bootstrap stages.
+
+All exact modular arithmetic is carried out in uint64 (products of two
+<2^30 residues fit exactly), which requires jax x64 mode.  Model code in
+``repro.models`` pins every dtype explicitly, so enabling x64 here is safe
+for the rest of the framework.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.params import CKKSParams, SMALL_TEST_PARAMS, PAPER_PARAMS  # noqa: E402,F401

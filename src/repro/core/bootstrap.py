@@ -1,0 +1,215 @@
+"""CKKS bootstrapping: ModRaise -> CoeffToSlot -> EvalMod -> SlotToCoeff.
+
+Follows the FFT-like factorized bootstrapping of Chen-Chillotti-Song [6]
+(the paper's configuration: "FFT-like bootstrapping with three stages").
+
+Factorization trick: the special FFT splits into radix-2 stage matrices
+with exactly 3 generalized diagonals {0, +gap, -gap}.  The bit-reversal
+permutation is NOT applied homomorphically: C2S (DIF direction) leaves
+slots in bit-reversed order, EvalMod is slot-wise (order-agnostic), and
+S2C (DIT direction) consumes bit-reversed input — the permutations cancel.
+
+Stages are merged into ``n_groups`` (default 3) dense products whose
+diagonals drive hoisted/BSGS homomorphic matvecs — these are precisely the
+PKBs of the paper's bootstrapping DFG.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import linear, poly
+from repro.core.ckks import CKKSContext, Ciphertext
+from repro.core.encoding import centered_crt
+from repro.core.keys import to_rns
+from repro.core.polyeval import chebyshev_coeffs, eval_chebyshev
+
+
+# --------------------- stage matrices (numpy, exact) ---------------------
+
+def _c2s_stage_diags(enc, ln: int) -> dict[int, np.ndarray]:
+    """Diagonals of one fft_special_inv stage (block length ln)."""
+    nh, M = enc.Nh, enc.M
+    lenh, lenq = ln >> 1, ln << 2
+    d0 = np.zeros(nh, dtype=complex)
+    dp = np.zeros(nh, dtype=complex)   # offset +lenh
+    dm = np.zeros(nh, dtype=complex)   # offset -lenh (== nh-lenh)
+    idx = (lenq - (enc.rot_group[:lenh] % lenq)) * (M // lenq)
+    w = enc.ksi[idx]
+    for t in range(nh):
+        pos = t % ln
+        if pos < lenh:
+            d0[t] = 1.0
+            dp[t] = 1.0
+        else:
+            j = pos - lenh
+            d0[t] = -w[j]
+            dm[t] = w[j]
+    return _merge_diags(nh, d0, dp, dm, lenh)
+
+
+def _merge_diags(nh, d0, dp, dm, lenh):
+    """Offsets +lenh and -lenh coincide when ln == nh — merge, don't clobber."""
+    out = {0: d0}
+    po, mo = lenh, (nh - lenh) % nh
+    if po == mo:
+        out[po] = dp + dm
+    else:
+        out[po] = dp
+        out[mo] = dm
+    return out
+
+
+def _s2c_stage_diags(enc, ln: int) -> dict[int, np.ndarray]:
+    """Diagonals of one fft_special stage (block length ln)."""
+    nh, M = enc.Nh, enc.M
+    lenh, lenq = ln >> 1, ln << 2
+    d0 = np.zeros(nh, dtype=complex)
+    dp = np.zeros(nh, dtype=complex)
+    dm = np.zeros(nh, dtype=complex)
+    idx = (enc.rot_group[:lenh] % lenq) * (M // lenq)
+    w = enc.ksi[idx]
+    for t in range(nh):
+        pos = t % ln
+        if pos < lenh:
+            d0[t] = 1.0
+            dp[t] = w[pos]
+        else:
+            j = pos - lenh
+            d0[t] = -w[j]
+            dm[t] = 1.0
+    return _merge_diags(nh, d0, dp, dm, lenh)
+
+
+def _diags_to_matrix(diags: dict[int, np.ndarray], nh: int) -> np.ndarray:
+    A = np.zeros((nh, nh), dtype=complex)
+    for d, v in diags.items():
+        for t in range(nh):
+            A[t, (t + d) % nh] = v[t]
+    return A
+
+
+def _group(mats: list[np.ndarray], n_groups: int) -> list[np.ndarray]:
+    """Compose consecutive stage matrices into n_groups products.
+
+    mats are in APPLICATION order (mats[0] applied first)."""
+    n = len(mats)
+    sizes = [n // n_groups + (1 if i < n % n_groups else 0)
+             for i in range(n_groups)]
+    out, i = [], 0
+    for s in sizes:
+        g = mats[i]
+        for m in mats[i + 1 : i + s]:
+            g = m @ g
+        out.append(g)
+        i += s
+    return out
+
+
+class Bootstrapper:
+    def __init__(self, ctx: CKKSContext, n_groups: int = 3,
+                 mod_K: int = 6, cheb_degree: int = 40, bsgs_bs: int = 0):
+        self.ctx = ctx
+        enc = ctx.encoder
+        nh = enc.Nh
+        self.n_groups = n_groups
+        self.mod_K = mod_K
+        self.cheb_degree = cheb_degree
+        self.bsgs_bs = bsgs_bs
+
+        # C2S: fft_special_inv stages applied ln=Nh..2, bitrev omitted,
+        # 1/nh folded into the last group.
+        lns = [1 << s for s in range(enc.Nh.bit_length() - 1, 0, -1)]
+        c2s_mats = [
+            _diags_to_matrix(_c2s_stage_diags(enc, ln), nh) for ln in lns
+        ]
+        self.c2s_groups = _group(c2s_mats, n_groups)
+        self.c2s_groups[-1] = self.c2s_groups[-1] / nh
+
+        # S2C: fft_special stages applied ln=2..Nh on bit-reversed input.
+        lns_f = [1 << s for s in range(1, enc.Nh.bit_length())]
+        s2c_mats = [
+            _diags_to_matrix(_s2c_stage_diags(enc, ln), nh) for ln in lns_f
+        ]
+        self.s2c_groups = _group(s2c_mats, n_groups)
+
+        # EvalMod: F(x) = sin(2*pi*x)/(2*pi) on [-K-1/2, K+1/2].
+        K = mod_K + 0.5
+        self.eval_range = K
+        self.cheb = chebyshev_coeffs(
+            lambda t: np.sin(2 * np.pi * K * t) / (2 * np.pi), cheb_degree
+        )
+
+    # ------------------------------------------------------------------
+    def mod_raise(self, ct: Ciphertext) -> Ciphertext:
+        """Lift a level-0 ciphertext to the full chain (exact, coeffs < q0)."""
+        ctx = self.ctx
+        p = ctx.params
+        assert ct.level == 0
+        base = (p.q_primes[0],)
+        full = p.q_chain(p.L)
+        out = []
+        for comp in (ct.c0, ct.c1):
+            coeff = poly.intt(comp, base, ctx.pc)
+            centered = centered_crt(np.asarray(coeff), base)
+            lifted = to_rns(centered.astype(np.int64), full)
+            out.append(poly.ntt(np.asarray(lifted), full, ctx.pc))
+        return Ciphertext(out[0], out[1], p.L, ct.scale)
+
+    def _matvec(self, ct: Ciphertext, mat: np.ndarray) -> Ciphertext:
+        diags = linear.matrix_diagonals(mat)
+        if self.bsgs_bs and len(diags) > self.bsgs_bs:
+            return linear.matvec_bsgs(self.ctx, ct, diags, self.bsgs_bs)
+        return linear.matvec_diag(self.ctx, ct, diags)
+
+    def coeff_to_slot(self, ct: Ciphertext) -> Ciphertext:
+        for g in self.c2s_groups:
+            ct = self._matvec(ct, g)
+        return ct
+
+    def slot_to_coeff(self, ct: Ciphertext) -> Ciphertext:
+        for g in self.s2c_groups:
+            ct = self._matvec(ct, g)
+        return ct
+
+    def eval_mod(self, ct: Ciphertext, q0_over_scale: float) -> Ciphertext:
+        """EvalMod on real-valued slots: x = m/q0 + I -> ~m/q0."""
+        ctx = self.ctx
+        nh = ctx.params.num_slots
+        # normalize to [-1, 1]: u = x / K
+        pre = ctx.encode(
+            np.full(nh, 1.0 / (self.eval_range * q0_over_scale)),
+            level=ct.level,
+        )
+        u = ctx.pt_mul(ct, pre, rescale=True)
+        out = eval_chebyshev(ctx, u, self.cheb)
+        post = ctx.encode(np.full(nh, q0_over_scale), level=out.level)
+        return ctx.pt_mul(out, post, rescale=True)
+
+    # ------------------------------------------------------------------
+    def bootstrap(self, ct: Ciphertext) -> Ciphertext:
+        """Full pipeline.  Input at level 0, output at a higher level."""
+        ctx = self.ctx
+        p = ctx.params
+        nh = p.num_slots
+        q0 = p.q_primes[0]
+
+        raised = self.mod_raise(ct)
+        t = self.coeff_to_slot(raised)
+
+        # split real/imag: re = (t + conj t)/2, im = (t - conj t)/(2i)
+        tc = ctx.conjugate(t)
+        half = ctx.encode(np.full(nh, 0.5), level=t.level)
+        re = ctx.pt_mul(ctx.add(t, tc), half, rescale=True)
+        mhalf_i = ctx.encode(np.full(nh, -0.5j), level=t.level)
+        im = ctx.pt_mul(ctx.sub(t, tc), mhalf_i, rescale=True)
+
+        q0_over_scale = q0 / ct.scale
+        re_m = self.eval_mod(re, q0_over_scale)
+        im_m = self.eval_mod(im, q0_over_scale)
+
+        lvl = min(re_m.level, im_m.level)
+        i_pt = ctx.encode(np.full(nh, 1.0j), level=lvl, scale=1.0)
+        im_i = ctx.pt_mul(ctx.level_down(im_m, lvl), i_pt, rescale=False)
+        merged = ctx.add(ctx.level_down(re_m, lvl), im_i)
+
+        return self.slot_to_coeff(merged)

@@ -1,0 +1,316 @@
+"""RNS-CKKS scheme: encrypt/decrypt, EWOs, keyswitch, rotation, hoisting.
+
+Ciphertext polynomials are (level+1, N) uint64 arrays in EVAL (NTT) domain.
+ModUp/ModDown follow the paper's xPU pipeline (INTT -> BConv -> NTT).
+The hoisted-rotation API implements "double hoisting" (Bossuat et al. [4]):
+one ModUp per ciphertext, one ModDown per linear combination — the
+communication-reduction primitive HERO maximizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import poly
+from repro.core.encoding import Encoder
+from repro.core.keys import EvalKey, KeyChain, sample_gaussian, to_rns
+from repro.core.params import CKKSParams
+
+
+@dataclasses.dataclass
+class Ciphertext:
+    c0: jnp.ndarray  # (level+1, N) eval domain
+    c1: jnp.ndarray
+    level: int
+    scale: float
+
+    @property
+    def n_limbs(self) -> int:
+        return self.level + 1
+
+
+@dataclasses.dataclass
+class Plaintext:
+    m: jnp.ndarray  # (level+1, N) eval domain
+    level: int
+    scale: float
+
+
+class CKKSContext:
+    """Everything needed to run CKKS programs functionally."""
+
+    def __init__(self, params: CKKSParams, seed: int = 1234,
+                 hamming_weight: int | None = None):
+        self.params = params
+        self.pc = poly.PolyContext(params)
+        self.encoder = Encoder(params)
+        self.keys = KeyChain(
+            params, self.pc, seed=seed, hamming_weight=hamming_weight
+        )
+        self.rng = np.random.default_rng(seed + 1)
+
+    # ------------------------- helpers --------------------------------
+    def chain(self, level: int) -> tuple[int, ...]:
+        return self.params.q_chain(level)
+
+    def ext_basis(self, level: int) -> tuple[int, ...]:
+        return self.chain(level) + self.params.p_primes
+
+    def _ext_rows(self, level: int) -> np.ndarray:
+        """Rows of a full-basis evk active at ``level``."""
+        L, k = self.params.L, self.params.k
+        return np.concatenate(
+            [np.arange(level + 1), np.arange(L + 1, L + 1 + k)]
+        )
+
+    # ------------------------- encode / encrypt ------------------------
+    def encode(self, z, level: int | None = None,
+               scale: float | None = None) -> Plaintext:
+        level = self.params.L if level is None else level
+        scale = self.params.scale if scale is None else scale
+        primes = self.chain(level)
+        m = self.encoder.encode(np.asarray(z), scale, primes)
+        m_eval = poly.ntt(jnp.asarray(m), primes, self.pc)
+        return Plaintext(m=m_eval, level=level, scale=scale)
+
+    def encrypt(self, z, level: int | None = None,
+                scale: float | None = None) -> Ciphertext:
+        pt = self.encode(z, level, scale)
+        level = pt.level
+        primes = self.chain(level)
+        mods = self.pc.mods(primes)
+        N = self.params.N
+        a_rns = np.stack(
+            [self.rng.integers(0, q, N, dtype=np.uint64) for q in primes]
+        )
+        a = poly.ntt(jnp.asarray(a_rns), primes, self.pc)
+        e = poly.ntt(
+            jnp.asarray(to_rns(sample_gaussian(self.rng, N), primes)),
+            primes, self.pc,
+        )
+        s = self._sk_rows(level)
+        b = poly.add(poly.sub(e, poly.mul(a, s, mods), mods), pt.m, mods)
+        return Ciphertext(c0=b, c1=a, level=level, scale=pt.scale)
+
+    def _sk_rows(self, level: int) -> jnp.ndarray:
+        return self.keys.s_eval[: level + 1]
+
+    def decrypt(self, ct: Ciphertext) -> np.ndarray:
+        primes = self.chain(ct.level)
+        mods = self.pc.mods(primes)
+        m_eval = poly.add(
+            ct.c0, poly.mul(ct.c1, self._sk_rows(ct.level), mods), mods
+        )
+        m_coeff = poly.intt(m_eval, primes, self.pc)
+        return self.encoder.decode(np.asarray(m_coeff), ct.scale, primes)
+
+    # ------------------------- EWOs ------------------------------------
+    def add(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        assert a.level == b.level, "level mismatch (use level_down)"
+        mods = self.pc.mods(self.chain(a.level))
+        return Ciphertext(
+            poly.add(a.c0, b.c0, mods), poly.add(a.c1, b.c1, mods),
+            a.level, a.scale,
+        )
+
+    def sub(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        mods = self.pc.mods(self.chain(a.level))
+        return Ciphertext(
+            poly.sub(a.c0, b.c0, mods), poly.sub(a.c1, b.c1, mods),
+            a.level, a.scale,
+        )
+
+    def pt_add(self, a: Ciphertext, pt: Plaintext) -> Ciphertext:
+        mods = self.pc.mods(self.chain(a.level))
+        return Ciphertext(
+            poly.add(a.c0, pt.m[: a.n_limbs], mods), a.c1, a.level, a.scale
+        )
+
+    def pt_mul(self, a: Ciphertext, pt: Plaintext,
+               rescale: bool = True) -> Ciphertext:
+        mods = self.pc.mods(self.chain(a.level))
+        out = Ciphertext(
+            poly.mul(a.c0, pt.m[: a.n_limbs], mods),
+            poly.mul(a.c1, pt.m[: a.n_limbs], mods),
+            a.level, a.scale * pt.scale,
+        )
+        return self.rescale(out) if rescale else out
+
+    # ------------------------- level management ------------------------
+    def rescale(self, ct: Ciphertext) -> Ciphertext:
+        lvl = ct.level
+        q_last = self.chain(lvl)[-1]
+        c0 = poly.rescale(ct.c0, lvl, self.pc)
+        c1 = poly.rescale(ct.c1, lvl, self.pc)
+        return Ciphertext(c0, c1, lvl - 1, ct.scale / q_last)
+
+    def level_down(self, ct: Ciphertext, target: int) -> Ciphertext:
+        assert target <= ct.level
+        n = target + 1
+        return Ciphertext(ct.c0[:n], ct.c1[:n], target, ct.scale)
+
+    # ------------------------- keyswitch core --------------------------
+    def modup_digits(self, a: jnp.ndarray, level: int) -> list[jnp.ndarray]:
+        """Decompose+ModUp a (level+1, N) poly to the extended basis."""
+        groups = self.params.digit_groups(level)
+        target = self.ext_basis(level)
+        out = []
+        row = 0
+        for D in groups:
+            digit = a[row : row + len(D)]
+            out.append(
+                poly.modup_digit(digit, D, target, self.pc, eval_domain=True)
+            )
+            row += len(D)
+        return out
+
+    def inner_product(self, digits: list[jnp.ndarray], evk: EvalKey,
+                      level: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """IP over the extended basis: (sum_j d_j*evk_j0, sum_j d_j*evk_j1)."""
+        rows = self._ext_rows(level)
+        ext = self.ext_basis(level)
+        mods = self.pc.mods(ext)
+        acc0 = acc1 = None
+        for j, d in enumerate(digits):
+            k = evk.digits[j]
+            t0 = poly.mul(d, k[0][rows], mods)
+            t1 = poly.mul(d, k[1][rows], mods)
+            acc0 = t0 if acc0 is None else poly.add(acc0, t0, mods)
+            acc1 = t1 if acc1 is None else poly.add(acc1, t1, mods)
+        return acc0, acc1
+
+    def keyswitch(self, a: jnp.ndarray, evk: EvalKey,
+                  level: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Full keyswitch of poly ``a``: ModUp -> IP -> ModDown."""
+        digits = self.modup_digits(a, level)
+        acc0, acc1 = self.inner_product(digits, evk, level)
+        d0 = poly.moddown(acc0, level, self.pc)
+        d1 = poly.moddown(acc1, level, self.pc)
+        return d0, d1
+
+    # ------------------------- mult / rotate ---------------------------
+    def multiply(self, a: Ciphertext, b: Ciphertext,
+                 rescale: bool = True) -> Ciphertext:
+        assert a.level == b.level
+        lvl = a.level
+        mods = self.pc.mods(self.chain(lvl))
+        d0 = poly.mul(a.c0, b.c0, mods)
+        d1 = poly.add(
+            poly.mul(a.c0, b.c1, mods), poly.mul(a.c1, b.c0, mods), mods
+        )
+        d2 = poly.mul(a.c1, b.c1, mods)
+        e0, e1 = self.keyswitch(d2, self.keys.mult_key, lvl)
+        out = Ciphertext(
+            poly.add(d0, e0, mods), poly.add(d1, e1, mods),
+            lvl, a.scale * b.scale,
+        )
+        return self.rescale(out) if rescale else out
+
+    def square(self, a: Ciphertext, rescale: bool = True) -> Ciphertext:
+        return self.multiply(a, a, rescale=rescale)
+
+    def _apply_galois(self, ct: Ciphertext, galois: int,
+                      evk: EvalKey) -> Ciphertext:
+        lvl = ct.level
+        primes = self.chain(lvl)
+        mods = self.pc.mods(primes)
+        c0r = poly.automorphism(ct.c0, primes, galois, self.pc)
+        c1r = poly.automorphism(ct.c1, primes, galois, self.pc)
+        d0, d1 = self.keyswitch(c1r, evk, lvl)
+        return Ciphertext(
+            poly.add(c0r, d0, mods), d1, lvl, ct.scale
+        )
+
+    def rotate(self, ct: Ciphertext, steps: int) -> Ciphertext:
+        steps = steps % self.params.num_slots
+        if steps == 0:
+            return ct
+        g = self.pc.rns.galois_for_rotation(steps)
+        return self._apply_galois(ct, g, self.keys.rot_key(steps))
+
+    def conjugate(self, ct: Ciphertext) -> Ciphertext:
+        g = self.pc.rns.galois_conjugate()
+        return self._apply_galois(ct, g, self.keys.conj_key)
+
+    # ------------------------- hoisted rotations -----------------------
+    def hoisted_rotation_sum(
+        self, ct: Ciphertext, steps_list: list[int],
+        pts: list[Plaintext] | None = None, rescale: bool = True,
+    ) -> Ciphertext:
+        """sum_r pt_r * Rot(ct, r) with ONE ModUp and ONE ModDown.
+
+        This is the hoisting primitive of Fig. 2(c): the ModUp of c1 is
+        shared across all rotations; per-rotation IP results (and PModUp'd
+        plaintext muls — Eq. (1)) are accumulated in the extended basis;
+        a single ModDown closes the block.
+        """
+        lvl = ct.level
+        base = self.chain(lvl)
+        ext = self.ext_basis(lvl)
+        base_mods = self.pc.mods(base)
+        ext_mods = self.pc.mods(ext)
+        digits = self.modup_digits(ct.c1, lvl)
+
+        pt_ms = None
+        if pts is not None:
+            pt_ms = []
+            for pt in pts:
+                assert pt.level == lvl
+                pt_ms.append(pt)
+
+        acc0e = acc1e = None
+        base0 = None
+        for i, steps in enumerate(steps_list):
+            steps = steps % self.params.num_slots
+            g = self.pc.rns.galois_for_rotation(steps)
+            key = self.keys.rot_key(steps)
+            # sigma_r commutes with ModUp (coefficient-wise BConv).
+            dig_r = [
+                poly.automorphism(d, ext, g, self.pc) for d in digits
+            ]
+            ks0, ks1 = self.inner_product(dig_r, key, lvl)
+            c0r = poly.automorphism(ct.c0, base, g, self.pc)
+            if pt_ms is not None:
+                pm_ext = self._pmodup(pt_ms[i], lvl)
+                ks0 = poly.mul(ks0, pm_ext, ext_mods)
+                ks1 = poly.mul(ks1, pm_ext, ext_mods)
+                c0r = poly.mul(c0r, pt_ms[i].m[: lvl + 1], base_mods)
+            acc0e = ks0 if acc0e is None else poly.add(acc0e, ks0, ext_mods)
+            acc1e = ks1 if acc1e is None else poly.add(acc1e, ks1, ext_mods)
+            base0 = c0r if base0 is None else poly.add(base0, c0r, base_mods)
+
+        d0 = poly.moddown(acc0e, lvl, self.pc)
+        d1 = poly.moddown(acc1e, lvl, self.pc)
+        out_scale = ct.scale * (pts[0].scale if pts is not None else 1.0)
+        out = Ciphertext(
+            poly.add(base0, d0, base_mods), d1, lvl, out_scale
+        )
+        if pts is not None and rescale:
+            out = self.rescale(out)
+        return out
+
+    def _pmodup(self, pt: Plaintext, level: int) -> jnp.ndarray:
+        """PModUp (Eq. (1)): EXACT lift of a plaintext to the extended basis.
+
+        Unlike ciphertext ModUp, the lift must be exact (centered CRT):
+        the approximate-FBC +k*Q error would multiply the keyswitch noise
+        (which exceeds P/k) and destroy the message — this is why the paper
+        cites the dedicated PModUp of MAD [1].  Plaintext coefficients are
+        small, so the exact lift is just a centered lift + reduction.
+        """
+        from repro.core.encoding import centered_crt
+
+        base = self.chain(level)
+        ext = self.ext_basis(level)
+        coeff = poly.intt(pt.m[: level + 1], base, self.pc)
+        centered = centered_crt(np.asarray(coeff), base)
+        new = tuple(p for p in ext if p not in base)
+        lifted = np.empty((len(new), self.params.N), dtype=np.uint64)
+        for i, q in enumerate(new):
+            lifted[i] = np.array(
+                [int(c) % q for c in centered], dtype=np.uint64
+            )
+        conv_eval = poly.ntt(jnp.asarray(lifted), new, self.pc)
+        return jnp.concatenate([pt.m[: level + 1], conv_eval], axis=0)

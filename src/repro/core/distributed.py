@@ -1,0 +1,117 @@
+"""Distributed keyswitch: the paper's IRF-vs-EVF dataflow as a sharding
+choice on the TPU mesh (DESIGN.md §Hardware adaptation).
+
+The keyswitch inner product  acc_c[r] = sum_j digits[j,r,:] * evk[j,c,r,:]
+is embarrassingly parallel over extended-basis limbs r.  Two layouts:
+
+  IRF (intermediate results flow):
+      evk is permanently LIMB-SHARDED across the mesh 'model' axis (it
+      never moves — the xMU-resident evk of the paper).  ModUp produces
+      digits COEFF-SHARDED (each device transformed its slice); an
+      all_to_all re-shards them limb-wise before the local IP.
+      Moved bytes/device: dnum * ext * N / P  words  (the intermediates).
+
+  EVF (evk flows):
+      digits stay coeff-sharded; the evk is all-gathered to every device,
+      which computes its coefficient slice of all limbs.
+      Moved bytes/device: dnum * 2 * ext * N * (P-1)/P  words (the keys).
+
+IRF moves ~2x less per keyswitch, and hoisted PKBs amortize ONE digit
+transfer over n rotations — exactly the paper's Fig. 3/4 trade-off,
+reproduced here as measurable collective bytes in the compiled HLO
+(see tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _local_ip(digits, evk, mods):
+    """digits: (dnum, l, n); evk: (dnum, 2, l, n); mods: (l, 1) uint64."""
+    acc0 = jnp.zeros(digits.shape[1:], jnp.uint64)
+    acc1 = jnp.zeros(digits.shape[1:], jnp.uint64)
+    for j in range(digits.shape[0]):
+        acc0 = (acc0 + (digits[j] * evk[j, 0]) % mods) % mods
+        acc1 = (acc1 + (digits[j] * evk[j, 1]) % mods) % mods
+    return acc0, acc1
+
+
+def ip_irf(mesh, axis: str = "model"):
+    """IRF inner product: digits coeff-sharded in, limb-sharded out.
+
+    Returns a jitted fn(digits (dnum,L,N), evk (dnum,2,L,N), mods (L,1)).
+    evk is limb-sharded and never moves; digits cross the mesh once.
+    """
+    n_dev = mesh.shape[axis]
+
+    def body(digits, evk, mods):
+        # digits arrive coeff-sharded: local (dnum, L, N/P).
+        # all_to_all: split limb axis, concat coeff axis -> (dnum, L/P, N)
+        d = jax.lax.all_to_all(digits, axis, split_axis=1, concat_axis=2,
+                               tiled=True)
+        return _local_ip(d, evk, mods)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, axis),        # digits: coeff-sharded
+                  P(None, None, axis, None),  # evk: limb-sharded, resident
+                  P(axis, None)),             # per-limb moduli
+        out_specs=(P(axis, None), P(axis, None)),
+    )
+    return jax.jit(fn), n_dev
+
+
+def ip_evf(mesh, axis: str = "model"):
+    """EVF inner product: the KEYS flow — evk (limb-sharded at rest) is
+    re-sharded coefficient-wise to meet the stationary digits.  Moves
+    dnum*2*ext*N*(P-1)/P words vs IRF's dnum*ext*N*(P-1)/P: the 2x the
+    paper's Fig. 3 attributes to moving both evk components."""
+
+    def body(digits, evk_shard, mods):
+        evk = jax.lax.all_to_all(evk_shard, axis, split_axis=3,
+                                 concat_axis=2, tiled=True)
+        return _local_ip(digits, evk, mods)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, axis),        # digits stay put (coeff)
+                  P(None, None, axis, None),  # evk limb-sharded at rest
+                  P(None, None)),
+        out_specs=(P(None, axis), P(None, axis)),
+    )
+    return jax.jit(fn), mesh.shape[axis]
+
+
+def reference_ip(digits, evk, mods):
+    """Single-device oracle (same math, no mesh)."""
+    return _local_ip(digits, evk, mods)
+
+
+def measure_collectives(fn, *sds):
+    """Lower+compile a distributed fn against ShapeDtypeStructs and return
+    per-kind collective byte counts (same parser as the dry-run).
+
+    NOTE: the single-process CPU backend lowers in-process all_to_all to
+    transposes, so this returns 0 there — use comm_bytes_per_device for
+    the analytic volume (exact for these fixed layouts)."""
+    from repro.launch.dryrun import collective_bytes
+
+    lowered = fn.lower(*sds)
+    compiled = lowered.compile()
+    return collective_bytes(compiled.as_text())
+
+
+def comm_bytes_per_device(kind: str, dnum: int, ext: int, n: int,
+                          p: int, word_bytes: int = 8) -> float:
+    """Exact per-device interconnect bytes of one inner product.
+
+    IRF: the digit tensor crosses the mesh once (all_to_all),
+    EVF: both evk components cross (all_to_all) — 2x IRF, the paper's
+    Fig. 3 single-keyswitch trade-off.  A hoisted PKB with r rotations
+    pays IRF ONCE for all r (digits shared) but EVF r times (distinct
+    keys), which is why hoisting flips the preferred dataflow."""
+    moved = {"IRF": dnum * ext * n, "EVF": dnum * 2 * ext * n}[kind]
+    return moved * (p - 1) / p * word_bytes / p

@@ -1,0 +1,224 @@
+"""Vectorized RNS polynomial arithmetic on jnp uint64 arrays.
+
+A polynomial under a basis of ``l`` primes is a ``(l, N)`` uint64 array of
+residues.  Products of two residues (< 2^30) fit uint64 exactly, so plain
+``(a * b) % q`` is exact.  Limb selections ("which primes") are static
+Python tuples resolved to row indices at trace time — every distinct level
+traces once, like a real FHE runtime specializing per level.
+
+Domain convention: ciphertext polynomials live in EVAL (NTT) domain;
+ModUp/ModDown run INTT -> BConv -> NTT per the paper's xPU pipeline.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import CKKSParams
+from repro.core.rns import RNSContext
+
+
+class PolyContext:
+    """jnp-resident tables derived from RNSContext."""
+
+    def __init__(self, params: CKKSParams):
+        self.params = params
+        self.rns = RNSContext(params)
+        r = self.rns
+        self.moduli = jnp.asarray(r.moduli)            # (n_limbs,)
+        self.psi_pows = jnp.asarray(r.psi_pows)        # (n_limbs, N)
+        self.psi_inv_pows = jnp.asarray(r.psi_inv_pows)
+        self.n_inv = jnp.asarray(r.n_inv)
+        self.bitrev = jnp.asarray(r.bitrev)
+        self.stage_tw = [jnp.asarray(t) for t in r.stage_tw]
+        self.stage_tw_inv = [jnp.asarray(t) for t in r.stage_tw_inv]
+
+    @lru_cache(maxsize=None)
+    def limb_rows(self, primes: tuple[int, ...]) -> np.ndarray:
+        return self.rns.limb_ids(primes)
+
+    def mods(self, primes: tuple[int, ...]) -> jnp.ndarray:
+        return self.moduli[self.limb_rows(primes)]
+
+
+# --------------------------- elementwise ops ----------------------------
+
+def add(a, b, mods):
+    return (a + b) % mods[:, None]
+
+
+def sub(a, b, mods):
+    return (a + mods[:, None] - b) % mods[:, None]
+
+
+def mul(a, b, mods):
+    return (a * b) % mods[:, None]
+
+
+def neg(a, mods):
+    return (mods[:, None] - a) % mods[:, None]
+
+
+def mul_scalar(a, s, mods):
+    """s: (l,) per-limb scalars already reduced."""
+    return (a * s[:, None]) % mods[:, None]
+
+
+# ------------------------------- NTT ------------------------------------
+
+def ntt(x, primes: tuple[int, ...], pc: PolyContext):
+    """Negacyclic forward NTT over stacked limbs. x: (l, N) uint64."""
+    rows = pc.limb_rows(primes)
+    mods = pc.moduli[rows]
+    l = len(primes)
+    n = pc.params.N
+    m1 = mods[:, None]
+    x = (x * pc.psi_pows[rows]) % m1
+    x = x[:, pc.bitrev]
+    m3 = mods[:, None, None]
+    for s in range(pc.params.logN):
+        m = 1 << s
+        x = x.reshape(l, n // (2 * m), 2 * m)
+        u = x[..., :m]
+        tw = pc.stage_tw[s][rows][:, None, :]
+        v = (x[..., m:] * tw) % m3
+        x = jnp.concatenate([(u + v) % m3, (u + m3 - v) % m3], axis=-1)
+    return x.reshape(l, n)
+
+
+def intt(x, primes: tuple[int, ...], pc: PolyContext):
+    """Negacyclic inverse NTT."""
+    rows = pc.limb_rows(primes)
+    mods = pc.moduli[rows]
+    l = len(primes)
+    n = pc.params.N
+    x = x[:, pc.bitrev]
+    m3 = mods[:, None, None]
+    for s in range(pc.params.logN):
+        m = 1 << s
+        x = x.reshape(l, n // (2 * m), 2 * m)
+        u = x[..., :m]
+        tw = pc.stage_tw_inv[s][rows][:, None, :]
+        v = (x[..., m:] * tw) % m3
+        x = jnp.concatenate([(u + v) % m3, (u + m3 - v) % m3], axis=-1)
+    x = x.reshape(l, n)
+    m1 = mods[:, None]
+    x = (x * pc.n_inv[rows][:, None]) % m1
+    return (x * pc.psi_inv_pows[rows]) % m1
+
+
+# --------------------------- basis conversion ---------------------------
+
+def bconv(x, src: tuple[int, ...], dst: tuple[int, ...], pc: PolyContext,
+          chunk: int = 8):
+    """Fast basis conversion (coeff domain). x: (len(src), N) -> (len(dst), N).
+
+    Approximate FBC — result may be off by a small multiple of prod(src);
+    downstream ModDown/rescale absorbs it (standard RNS-CKKS).
+    """
+    qhat_inv, qhat_mod = pc.rns.bconv_consts(tuple(src), tuple(dst))
+    src_mods = pc.mods(tuple(src))
+    dst_mods = pc.mods(tuple(dst))
+    t = (x * jnp.asarray(qhat_inv)[:, None]) % src_mods[:, None]
+    qm = jnp.asarray(qhat_mod)                         # (ls, ld)
+    dm = dst_mods[None, :, None]                       # (1, ld, 1)
+    # Chunk over source limbs to bound the (ls, ld, N) intermediate.
+    ls = len(src)
+    acc = jnp.zeros((len(dst), x.shape[1]), dtype=jnp.uint64)
+    for i in range(0, ls, chunk):
+        part = (t[i : i + chunk, None, :] * qm[i : i + chunk, :, None]) % dm
+        acc = (acc + part.sum(axis=0)) % dst_mods[:, None]
+    return acc
+
+
+# --------------------------- ModUp / ModDown ----------------------------
+
+def modup_digit(x_digit, digit_primes, target_primes, pc: PolyContext,
+                eval_domain: bool = True):
+    """Lift one decomposition digit to the extended basis.
+
+    x_digit: (alpha, N) residues under digit_primes (eval domain if
+    eval_domain).  Returns (len(target), N) under ``target_primes``
+    (superset containing digit_primes), eval domain.
+    INTT -> BConv -> NTT for the new limbs; original limbs pass through.
+    """
+    coeff = intt(x_digit, digit_primes, pc) if eval_domain else x_digit
+    new_primes = tuple(p for p in target_primes if p not in digit_primes)
+    converted = bconv(coeff, tuple(digit_primes), new_primes, pc)
+    if eval_domain:
+        converted = ntt(converted, new_primes, pc)
+        own = x_digit
+    else:
+        own = x_digit
+    # Assemble rows in target order.
+    out_rows = []
+    digit_set = {p: i for i, p in enumerate(digit_primes)}
+    new_set = {p: i for i, p in enumerate(new_primes)}
+    for p in target_primes:
+        if p in digit_set:
+            out_rows.append(own[digit_set[p]])
+        else:
+            out_rows.append(converted[new_set[p]])
+    return jnp.stack(out_rows)
+
+
+def moddown(x, level: int, pc: PolyContext, eval_domain: bool = True):
+    """Scale down by P: input under (Q_level u P), output under Q_level.
+
+    x rows ordered: q_0..q_level, p_0..p_{k-1}.
+    """
+    params = pc.params
+    q_primes = params.q_chain(level)
+    p_primes = params.p_primes
+    nq = len(q_primes)
+    xq, xp = x[:nq], x[nq:]
+    if eval_domain:
+        xp_coeff = intt(xp, p_primes, pc)
+    else:
+        xp_coeff = xp
+    conv = bconv(xp_coeff, tuple(p_primes), tuple(q_primes), pc)
+    if eval_domain:
+        conv = ntt(conv, tuple(q_primes), pc)
+    q_mods = pc.mods(tuple(q_primes))
+    diff = sub(xq, conv, q_mods)
+    pinv = jnp.asarray(pc.rns.p_inv_mod_q(level))
+    return mul_scalar(diff, pinv, q_mods)
+
+
+def rescale(x, level: int, pc: PolyContext, eval_domain: bool = True):
+    """Drop the last prime q_level: out_i = (x_i - x_last) / q_level mod q_i."""
+    params = pc.params
+    chain = params.q_chain(level)
+    keep = chain[:-1]
+    last = x[-1:]
+    if eval_domain:
+        last_coeff = intt(last, (chain[-1],), pc)
+    else:
+        last_coeff = last
+    # Re-express x_last's residue under each remaining prime.
+    lifted = bconv(last_coeff, (chain[-1],), tuple(keep), pc)
+    if eval_domain:
+        lifted = ntt(lifted, tuple(keep), pc)
+    mods = pc.mods(tuple(keep))
+    diff = sub(x[:-1], lifted, mods)
+    qinv = jnp.asarray(pc.rns.q_last_inv(level))
+    return mul_scalar(diff, qinv, mods)
+
+
+# --------------------------- automorphism -------------------------------
+
+def automorphism(x, primes: tuple[int, ...], galois: int, pc: PolyContext,
+                 eval_domain: bool = True):
+    """Apply X -> X^galois.  Functionally applied in coeff domain."""
+    if eval_domain:
+        x = intt(x, primes, pc)
+    src, negmask = pc.rns.autom_tables(galois)
+    mods = pc.mods(tuple(primes))[:, None]
+    g = x[:, jnp.asarray(src)]
+    negm = jnp.asarray(negmask)[None, :]
+    g = jnp.where(negm == 1, (mods - g) % mods, g)
+    if eval_domain:
+        g = ntt(g, primes, pc)
+    return g

@@ -1,0 +1,145 @@
+"""Homomorphic polynomial evaluation in the Chebyshev basis.
+
+Used by EvalMod in bootstrapping (scaled-sine approximation) and by HELR
+(sigmoid).  Chebyshev recurrences keep coefficients O(1) on [-1, 1]
+(power-basis coefficients of sine approximants blow up exponentially).
+
+Scale management: every ciphertext carries an exact float scale; all
+cross-term additions go through ``align`` which mod-switches and
+scale-corrects via a constant multiplication.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import poly
+from repro.core.ckks import CKKSContext, Ciphertext
+
+
+def mul_const(ctx: CKKSContext, ct: Ciphertext, c: complex,
+              target_scale: float) -> Ciphertext:
+    """ct * c with the product's post-rescale scale forced to target_scale."""
+    q_last = ctx.chain(ct.level)[-1]
+    pt_scale = target_scale * q_last / ct.scale
+    pt = ctx.encode(
+        np.full(ctx.params.num_slots, complex(c)),
+        level=ct.level, scale=pt_scale,
+    )
+    out = ctx.pt_mul(ct, pt, rescale=True)
+    out.scale = target_scale  # exact by construction
+    return out
+
+
+def add_const(ctx: CKKSContext, ct: Ciphertext, c: complex) -> Ciphertext:
+    pt = ctx.encode(
+        np.full(ctx.params.num_slots, complex(c)),
+        level=ct.level, scale=ct.scale,
+    )
+    return ctx.pt_add(ct, pt)
+
+
+def align(ctx: CKKSContext, ct: Ciphertext, level: int,
+          scale: float) -> Ciphertext:
+    """Bring ct to (level, scale): mod-switch down + constant-mul fixup."""
+    assert level <= ct.level
+    if abs(ct.scale / scale - 1.0) < 1e-12:
+        return ctx.level_down(ct, level)
+    if level == ct.level:
+        # need a scale fix but no level to burn — multiply and land lower
+        raise ValueError("cannot fix scale without a spare level")
+    ct = ctx.level_down(ct, level + 1)
+    return ctx.level_down(mul_const(ctx, ct, 1.0, scale), level)
+
+
+def scaled_double(ctx: CKKSContext, ct: Ciphertext) -> Ciphertext:
+    """2*ct without scale change (cheap: residues doubled mod q)."""
+    mods = ctx.pc.mods(ctx.chain(ct.level))
+    return Ciphertext(
+        poly.mul_scalar(ct.c0, (mods * 0 + 2).astype(mods.dtype), mods),
+        poly.mul_scalar(ct.c1, (mods * 0 + 2).astype(mods.dtype), mods),
+        ct.level, ct.scale,
+    )
+
+
+class ChebyshevEvaluator:
+    """Builds T_k(x) ciphertexts on demand and combines them."""
+
+    def __init__(self, ctx: CKKSContext, ct_x: Ciphertext):
+        self.ctx = ctx
+        self.T: dict[int, Ciphertext] = {1: ct_x}
+
+    def get(self, k: int) -> Ciphertext:
+        if k in self.T:
+            return self.T[k]
+        ctx = self.ctx
+        if k % 2 == 0:
+            half = self.get(k // 2)
+            sq = ctx.multiply(half, half, rescale=True)
+            out = add_const(ctx, scaled_double(ctx, sq), -1.0)
+        else:
+            a, b = (k + 1) // 2, (k - 1) // 2
+            ta, tb = self.get(a), self.get(b)
+            lvl = min(ta.level, tb.level)
+            if abs(ta.scale / tb.scale - 1.0) > 1e-9:
+                lvl -= 1
+                scale = ctx.params.scale
+                ta = align(ctx, ta, lvl, scale)
+                tb = align(ctx, tb, lvl, scale)
+            else:
+                ta, tb = ctx.level_down(ta, lvl), ctx.level_down(tb, lvl)
+            prod = ctx.multiply(ta, tb, rescale=True)
+            prod2 = scaled_double(ctx, prod)
+            # T_a*T_b*2 - T_{a-b};  a-b == 1 here.
+            t1 = self.get(1)
+            t1a = align(ctx, t1, prod2.level, prod2.scale)
+            out = ctx.sub(prod2, t1a)
+        self.T[k] = out
+        return out
+
+
+def eval_chebyshev(ctx: CKKSContext, ct: Ciphertext,
+                   coeffs: np.ndarray, tol: float = 1e-13) -> Ciphertext:
+    """sum_k coeffs[k] * T_k(ct) for x in [-1, 1]."""
+    d = len(coeffs) - 1
+    ev = ChebyshevEvaluator(ctx, ct)
+    needed = [k for k in range(1, d + 1) if abs(coeffs[k]) > tol]
+    for k in needed:
+        ev.get(k)
+    min_lvl = min(ev.T[k].level for k in needed) - 1
+    target_scale = ctx.params.scale
+    acc = None
+    for k in needed:
+        tk = ev.T[k]
+        tk = ctx.level_down(tk, min_lvl + 1)
+        term = mul_const(ctx, tk, complex(coeffs[k]), target_scale)
+        term = ctx.level_down(term, min_lvl)
+        acc = term if acc is None else ctx.add(acc, term)
+    return add_const(ctx, acc, complex(coeffs[0]))
+
+
+def eval_poly_horner(ctx: CKKSContext, ct: Ciphertext,
+                     coeffs: np.ndarray) -> Ciphertext:
+    """Power-basis Horner — for short, well-conditioned polynomials
+    (e.g. HELR's degree-3/5/7 sigmoid).  acc <- acc*x + c_k."""
+    acc = None
+    for c in coeffs[::-1]:
+        if acc is None:
+            acc = ("const", complex(c))
+            continue
+        if isinstance(acc, tuple):
+            acc = mul_const(ctx, ct, acc[1], ctx.params.scale)
+        else:
+            lvl = min(acc.level, ct.level)
+            if acc.level != lvl or abs(acc.scale - ctx.params.scale) > 1e-9:
+                acc = align(ctx, acc, lvl - 1, ctx.params.scale)
+                lvl -= 1
+            acc = ctx.multiply(acc, ctx.level_down(ct, lvl), rescale=True)
+        acc = add_const(ctx, acc, complex(c))
+    return acc
+
+
+def chebyshev_coeffs(fn, degree: int):
+    """Chebyshev interpolation of fn on [-1, 1]."""
+    k = np.arange(degree + 1)
+    x = np.cos(np.pi * (k + 0.5) / (degree + 1))
+    return np.polynomial.chebyshev.chebfit(x, fn(x), degree)

@@ -1,0 +1,9 @@
+"""HERO: hoisting-enhanced DFG optimization framework (paper Sec. IV).
+
+Pipeline:  trace/generate DFG  ->  PKB identify (layering)
+        ->  degree-minimized expansion  ->  PKB fusion (DP evaluator)
+        ->  hoisting rewrite  ->  IRF/EVF/hybrid dataflow mapping
+        ->  repro.sim (performance model) or repro.core (functional exec).
+"""
+from repro.dfg.graph import DFG, Node, OpKind  # noqa: F401
+from repro.dfg.pkb import PKB, identify_pkbs  # noqa: F401

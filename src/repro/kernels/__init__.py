@@ -1,0 +1,17 @@
+"""Pallas-TPU kernels for the paper's compute hot spots.
+
+The paper's xPU accelerates NTT (iterative radix-2 NTTUs) and BConv
+(tree-based BConvUs); its xMU fuses MemOps (IP + PMul).  Here those map to:
+
+  ntt/        radix-2 negacyclic NTT, stages unrolled at trace time,
+              one limb's polynomial resident in VMEM per grid step.
+  bconv/      scale pass + tree-reduce pass over source limbs.
+  fused_ip/   keyswitch inner product with optional fused PMul
+              (the xMU "MemOp fusion" of Fig. 10(d)).
+
+All kernels use uint32 Montgomery arithmetic built from 16-bit limb
+partial products (``modops``) — TPU has no 64-bit integer multiply and no
+mulhi, but 16x16->32 partials + carries are VPU-native.  Kernels are
+validated on CPU with interpret=True against pure-jnp oracles (ref.py)
+and against the exact uint64 core (repro.core.poly).
+"""

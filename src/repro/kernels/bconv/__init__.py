@@ -1,0 +1,1 @@
+from repro.kernels.bconv.ops import BConvKernelConsts, bconv_kernel  # noqa: F401

@@ -1,0 +1,78 @@
+"""Pallas fast-basis-conversion kernel (the paper's tree-based BConvU).
+
+Two passes, mirroring Fig. 12(b):
+
+  scale  : t_i = [x_i * qhat_inv_i]_{q_i}           (grid over src limbs)
+  reduce : y_j = sum_i t_i * (qhat_i mod d_j)  mod d_j  (grid over dst
+           limbs x coefficient blocks; the per-limb loop is the tree)
+
+The reduce pass keeps one coefficient block of ALL source limbs in VMEM
+(ls x BLK x 4 B), which is the VMEM-resident working set the paper's
+BConvU pipelines through its adder tree.  Constants are Montgomery-form,
+data stays normal-form (see kernels.modops).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.modops import add_mod, mont_mul
+
+
+def _scale_kernel(x_ref, qinv_mont_ref, q_ref, qneg_ref, o_ref):
+    q = q_ref[0, 0]
+    qn = qneg_ref[0, 0]
+    o_ref[0, :] = mont_mul(x_ref[0, :], qinv_mont_ref[0, 0], q, qn)
+
+
+def _reduce_kernel(t_ref, c_ref, d_ref, dneg_ref, o_ref, *, ls: int):
+    d = d_ref[0, 0]
+    dn = dneg_ref[0, 0]
+    acc = mont_mul(t_ref[0, :], c_ref[0, 0], d, dn)
+    for i in range(1, ls):                       # trace-time adder tree
+        acc = add_mod(acc, mont_mul(t_ref[i, :], c_ref[i, 0], d, dn), d)
+    o_ref[0, :] = acc
+
+
+def bconv_pallas(x, qhat_inv_mont, src_q, src_qneg, c_mont, dst_q, dst_qneg,
+                 *, block: int = 0, interpret: bool = True):
+    """x: (ls, N) uint32 coeff domain -> (ld, N) under the dst basis.
+
+    qhat_inv_mont: (ls, 1); c_mont: (ls, ld) Montgomery of qhat_i mod d_j;
+    src_q/src_qneg: (ls, 1); dst_q/dst_qneg: (ld, 1).
+    """
+    ls, n = x.shape
+    ld = c_mont.shape[1]
+    blk = block or n
+
+    t = pl.pallas_call(
+        _scale_kernel,
+        grid=(ls,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ls, n), jnp.uint32),
+        interpret=interpret,
+    )(x, qhat_inv_mont, src_q, src_qneg)
+
+    kernel = functools.partial(_reduce_kernel, ls=ls)
+    return pl.pallas_call(
+        kernel,
+        grid=(ld, n // blk),
+        in_specs=[
+            pl.BlockSpec((ls, blk), lambda j, b: (0, b)),
+            pl.BlockSpec((ls, 1), lambda j, b: (0, j)),
+            pl.BlockSpec((1, 1), lambda j, b: (j, 0)),
+            pl.BlockSpec((1, 1), lambda j, b: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda j, b: (j, b)),
+        out_shape=jax.ShapeDtypeStruct((ld, n), jnp.uint32),
+        interpret=interpret,
+    )(t, c_mont, dst_q, dst_qneg)

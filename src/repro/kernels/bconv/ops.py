@@ -1,0 +1,74 @@
+"""jit'd wrapper + constants for the BConv kernel."""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rns import RNSContext
+from repro.kernels.bconv.bconv import bconv_pallas
+from repro.kernels.bconv import ref as _ref
+from repro.kernels.modops import qinv_neg_host, to_mont_host
+
+
+class BConvKernelConsts:
+    def __init__(self, rns: RNSContext, src: tuple[int, ...],
+                 dst: tuple[int, ...]):
+        qhat_inv, qhat_mod = rns.bconv_consts(tuple(src), tuple(dst))
+        ls, ld = len(src), len(dst)
+        self.qhat_inv = qhat_inv
+        self.qhat_mod = qhat_mod
+        self.src_q = np.array(src, dtype=np.uint32).reshape(ls, 1)
+        self.dst_q = np.array(dst, dtype=np.uint32).reshape(ld, 1)
+        self.src_qneg = np.array(
+            [qinv_neg_host(q) for q in src], dtype=np.uint32
+        ).reshape(ls, 1)
+        self.dst_qneg = np.array(
+            [qinv_neg_host(q) for q in dst], dtype=np.uint32
+        ).reshape(ld, 1)
+        self.qhat_inv_mont = np.stack(
+            [to_mont_host(np.array([qhat_inv[i]]), src[i]) for i in range(ls)]
+        )
+        self.qhat_mod_mont = np.stack(
+            [
+                np.array(
+                    [int(to_mont_host(np.array([qhat_mod[i, j]]), dst[j])[0])
+                     for j in range(ld)],
+                    dtype=np.uint32,
+                )
+                for i in range(ls)
+            ]
+        )
+
+
+@lru_cache(maxsize=None)
+def _consts(rns_id, src, dst):
+    rns = _RNS_REGISTRY[rns_id]
+    return BConvKernelConsts(rns, src, dst)
+
+
+_RNS_REGISTRY: dict[int, RNSContext] = {}
+
+
+def bconv_kernel(x, src, dst, rns: RNSContext, block: int = 0,
+                 interpret: bool = True):
+    """(ls, N) uint32 -> (ld, N) uint32 via the Pallas kernel."""
+    _RNS_REGISTRY[id(rns)] = rns
+    c = _consts(id(rns), tuple(src), tuple(dst))
+    return bconv_pallas(
+        x.astype(jnp.uint32),
+        jnp.asarray(c.qhat_inv_mont), jnp.asarray(c.src_q),
+        jnp.asarray(c.src_qneg), jnp.asarray(c.qhat_mod_mont),
+        jnp.asarray(c.dst_q), jnp.asarray(c.dst_qneg),
+        block=block, interpret=interpret,
+    )
+
+
+def bconv_oracle(x, src, dst, rns: RNSContext):
+    _RNS_REGISTRY[id(rns)] = rns
+    c = _consts(id(rns), tuple(src), tuple(dst))
+    return _ref.bconv_ref(
+        x, jnp.asarray(c.qhat_inv), jnp.asarray(c.src_q.reshape(-1)),
+        jnp.asarray(c.qhat_mod), jnp.asarray(c.dst_q.reshape(-1)),
+    )

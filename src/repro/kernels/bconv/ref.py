@@ -1,0 +1,23 @@
+"""Pure-jnp uint64 oracle for the BConv kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bconv_ref(x, qhat_inv, src_q, qhat_mod, dst_q):
+    """x: (ls, N) uint32; qhat_inv: (ls,); qhat_mod: (ls, ld); NORMAL form."""
+    x = x.astype(jnp.uint64)
+    qhat_inv = qhat_inv.astype(jnp.uint64)
+    src_q = src_q.astype(jnp.uint64)
+    qhat_mod = qhat_mod.astype(jnp.uint64)
+    dst_q = dst_q.astype(jnp.uint64)
+    t = (x * qhat_inv[:, None]) % src_q[:, None]
+    ld = qhat_mod.shape[1]
+    outs = []
+    for j in range(ld):
+        d = dst_q[j]
+        acc = jnp.zeros(x.shape[1], dtype=jnp.uint64)
+        for i in range(x.shape[0]):
+            acc = (acc + (t[i] * qhat_mod[i, j]) % d) % d
+        outs.append(acc)
+    return jnp.stack(outs).astype(jnp.uint32)

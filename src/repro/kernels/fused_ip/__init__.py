@@ -1,0 +1,1 @@
+from repro.kernels.fused_ip.ops import fused_ip_kernel, fused_ip_oracle  # noqa: F401

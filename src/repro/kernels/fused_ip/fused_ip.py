@@ -1,0 +1,70 @@
+"""Pallas fused keyswitch inner-product kernel (xMU "MemOp fusion").
+
+Computes, per extended-basis limb r (grid axis):
+
+    acc_c[r] = sum_j digits[j, r, :] * evk[j, c, r, :]   (c = 0, 1)
+    optionally followed by  acc_c[r] *= pt[r, :]          (fused PMul)
+
+in ONE pass over VMEM-resident blocks — the paper's Fig. 10(d) fusion that
+eliminates the row-switch write-back of the intermediate IP result between
+sequential MemOps.  evk and pt are Montgomery-form; digits stay normal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.modops import add_mod, mont_mul
+
+
+def _fused_ip_kernel(d_ref, k_ref, pt_ref, q_ref, qneg_ref,
+                     o0_ref, o1_ref, *, dnum: int, with_pt: bool):
+    q = q_ref[0, 0]
+    qn = qneg_ref[0, 0]
+    acc0 = mont_mul(d_ref[0, 0, :], k_ref[0, 0, 0, :], q, qn)
+    acc1 = mont_mul(d_ref[0, 0, :], k_ref[0, 1, 0, :], q, qn)
+    for j in range(1, dnum):                     # trace-time unroll
+        dj = d_ref[j, 0, :]
+        acc0 = add_mod(acc0, mont_mul(dj, k_ref[j, 0, 0, :], q, qn), q)
+        acc1 = add_mod(acc1, mont_mul(dj, k_ref[j, 1, 0, :], q, qn), q)
+    if with_pt:
+        pm = pt_ref[0, :]
+        acc0 = mont_mul(acc0, pm, q, qn)
+        acc1 = mont_mul(acc1, pm, q, qn)
+    o0_ref[0, :] = acc0
+    o1_ref[0, :] = acc1
+
+
+def fused_ip_pallas(digits, evk_mont, pt_mont, q, qneg,
+                    *, interpret: bool = True):
+    """digits: (dnum, l, N) u32; evk_mont: (dnum, 2, l, N) u32 Montgomery;
+    pt_mont: (l, N) u32 Montgomery or None; q/qneg: (l, 1) u32.
+    Returns (acc0, acc1), each (l, N) u32."""
+    dnum, l, n = digits.shape
+    with_pt = pt_mont is not None
+    if pt_mont is None:
+        pt_mont = jnp.zeros((l, n), dtype=jnp.uint32)
+    kernel = functools.partial(_fused_ip_kernel, dnum=dnum, with_pt=with_pt)
+    return pl.pallas_call(
+        kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((dnum, 1, n), lambda r: (0, r, 0)),
+            pl.BlockSpec((dnum, 2, 1, n), lambda r: (0, 0, r, 0)),
+            pl.BlockSpec((1, n), lambda r: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda r: (r, 0)),
+            pl.BlockSpec((1, n), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, n), jnp.uint32),
+            jax.ShapeDtypeStruct((l, n), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(digits, evk_mont, pt_mont, q, qneg)

@@ -1,0 +1,48 @@
+"""jit'd wrapper for the fused IP kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_ip.fused_ip import fused_ip_pallas
+from repro.kernels.fused_ip import ref as _ref
+from repro.kernels.modops import qinv_neg_host, to_mont_host
+
+
+def _mont(arr: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """Montgomery-convert along the limb axis (q broadcast per row)."""
+    out = np.empty(arr.shape, dtype=np.uint32)
+    it = np.ndindex(*arr.shape[:-2])
+    for idx in it:
+        for r in range(arr.shape[-2]):
+            out[idx + (r,)] = to_mont_host(
+                arr[idx + (r,)].astype(np.uint64), int(q[r])
+            )
+    return out
+
+
+def fused_ip_kernel(digits, evk, pt, q, interpret: bool = True):
+    """NORMAL-form inputs; conversion to Montgomery happens here (in a
+    real deployment evk/pt are stored pre-converted)."""
+    qv = np.asarray(q, dtype=np.uint32)
+    l = qv.shape[0]
+    evk_m = _mont(np.asarray(evk), qv)
+    pt_m = _mont(np.asarray(pt)[None], qv)[0] if pt is not None else None
+    qneg = np.array([qinv_neg_host(int(x)) for x in qv], dtype=np.uint32)
+    return fused_ip_pallas(
+        jnp.asarray(np.asarray(digits, dtype=np.uint32)),
+        jnp.asarray(evk_m),
+        jnp.asarray(pt_m) if pt_m is not None else None,
+        jnp.asarray(qv.reshape(l, 1)),
+        jnp.asarray(qneg.reshape(l, 1)),
+        interpret=interpret,
+    )
+
+
+def fused_ip_oracle(digits, evk, pt, q):
+    return _ref.fused_ip_ref(
+        jnp.asarray(np.asarray(digits, dtype=np.uint32)),
+        jnp.asarray(np.asarray(evk, dtype=np.uint32)),
+        jnp.asarray(np.asarray(pt, dtype=np.uint32)) if pt is not None else None,
+        jnp.asarray(np.asarray(q, dtype=np.uint32)),
+    )

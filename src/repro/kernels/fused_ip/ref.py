@@ -1,0 +1,22 @@
+"""Pure-jnp uint64 oracle for the fused IP kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_ip_ref(digits, evk, pt, q):
+    """digits: (dnum, l, N); evk: (dnum, 2, l, N); pt: (l, N) or None;
+    all NORMAL-form uint32; q: (l,). Returns (acc0, acc1) uint32."""
+    d = digits.astype(jnp.uint64)
+    k = evk.astype(jnp.uint64)
+    qq = q.astype(jnp.uint64)[None, :, None]
+    acc0 = jnp.zeros(d.shape[1:], dtype=jnp.uint64)
+    acc1 = jnp.zeros(d.shape[1:], dtype=jnp.uint64)
+    for j in range(d.shape[0]):
+        acc0 = (acc0 + (d[j] * k[j, 0]) % qq[0]) % qq[0]
+        acc1 = (acc1 + (d[j] * k[j, 1]) % qq[0]) % qq[0]
+    if pt is not None:
+        p = pt.astype(jnp.uint64)
+        acc0 = (acc0 * p) % qq[0]
+        acc1 = (acc1 * p) % qq[0]
+    return acc0.astype(jnp.uint32), acc1.astype(jnp.uint32)

@@ -1,0 +1,77 @@
+"""uint32 Montgomery modular arithmetic from 16-bit limb partials.
+
+Everything here is elementwise jnp on uint32 and runs identically inside a
+Pallas TPU kernel body and as plain jnp.  Constraints:
+
+  * modulus q odd, q < 2^30  (so the REDC accumulator fits uint32)
+  * R = 2^32
+
+Montgomery trick used throughout the kernels: keep VALUES in the normal
+domain and constants (twiddles, BConv factors, evk) in Montgomery form —
+mont_mul(value, const_mont) = value*const mod q, so no domain-conversion
+passes are ever needed on the data.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+def mul32_split(a, b):
+    """Full 32x32 -> (hi32, lo32) product via 16-bit limbs (no 64-bit ops).
+
+    NOTE: literals stay Python ints so Pallas sees no captured constants.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    a0, a1 = a & 0xFFFF, a >> 16
+    b0, b1 = b & 0xFFFF, b >> 16
+    ll = a0 * b0
+    lh = a0 * b1
+    hl = a1 * b0
+    hh = a1 * b1
+    mid = lh + hl                      # may wrap
+    carry_mid = (mid < lh).astype(jnp.uint32)
+    lo = ll + (mid << 16)              # may wrap
+    carry_lo = (lo < ll).astype(jnp.uint32)
+    hi = hh + (mid >> 16) + (carry_mid << 16) + carry_lo
+    return hi, lo
+
+
+def mont_redc(hi, lo, q, qinv_neg):
+    """REDC: (hi*2^32 + lo) * 2^-32 mod q, for T < q*2^32, q < 2^30 odd.
+
+    qinv_neg = -q^{-1} mod 2^32.
+    """
+    m = lo * qinv_neg                  # mod 2^32 (wrapping)
+    mq_hi, _ = mul32_split(m, q)
+    carry = (lo != 0).astype(jnp.uint32)
+    t = hi + mq_hi + carry             # < 1.5*q, no overflow for q < 2^30
+    return jnp.where(t >= q, t - q, t)
+
+
+def mont_mul(a, b, q, qinv_neg):
+    """a * b * 2^-32 mod q.  If b is in Montgomery form (b*2^32 mod q),
+    the result is the plain product a*b mod q."""
+    hi, lo = mul32_split(a, b)
+    return mont_redc(hi, lo, q, qinv_neg)
+
+
+def add_mod(a, b, q):
+    s = a + b                          # < 2q < 2^31, no overflow
+    return jnp.where(s >= q, s - q, s)
+
+
+def sub_mod(a, b, q):
+    return jnp.where(a >= b, a - b, a + q - b)
+
+
+# ----------------------- host-side constant helpers ----------------------
+
+def qinv_neg_host(q: int) -> np.uint32:
+    """-q^{-1} mod 2^32 (host precompute)."""
+    return np.uint32((-pow(q, -1, 1 << 32)) % (1 << 32))
+
+
+def to_mont_host(x: np.ndarray, q: int) -> np.ndarray:
+    """Convert constants to Montgomery form on the host (exact ints)."""
+    return ((x.astype(object) * (1 << 32)) % q).astype(np.uint32)

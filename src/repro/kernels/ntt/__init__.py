@@ -1,0 +1,1 @@
+from repro.kernels.ntt.ops import NTTKernelTables, ntt_fwd, ntt_inv  # noqa: F401

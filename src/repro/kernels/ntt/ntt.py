@@ -1,0 +1,92 @@
+"""Pallas negacyclic NTT kernel (radix-2, trace-time-unrolled stages).
+
+TPU adaptation of the paper's iterative NTTU (Fig. 12(a)):
+
+  * DIF (forward, natural -> bit-reversed) and DIT (inverse, bit-reversed
+    -> natural) so NO in-kernel permutation/gather is ever needed — the
+    eval domain simply lives in bit-reversed order, which all elementwise
+    consumers (IP/PMul/CAdd) are indifferent to.
+  * One RNS limb's full polynomial is VMEM-resident per grid step
+    (N=2^16 x 4 B = 256 KB << 16 MB VMEM); the grid walks limbs, which is
+    also the paper's per-limb NTTU parallelism axis.
+  * uint32 Montgomery arithmetic (see kernels.modops): data stays in the
+    normal domain, twiddles/twists are pre-converted to Montgomery form.
+
+Stage twiddles are packed flat: tw[m + j] = w^{(N >> (s+1)) * j} for
+m = 2^s — the classic twiddle-tree layout, one (N,) vector per limb.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.modops import add_mod, mont_mul, sub_mod
+
+
+def _fwd_body(x, twist, tw, q, qinv, logn: int):
+    n = 1 << logn
+    x = mont_mul(x, twist, q, qinv)          # psi^i pre-twist (negacyclic)
+    for s in range(logn - 1, -1, -1):        # DIF: big blocks first
+        m = 1 << s
+        xb = x.reshape(n // (2 * m), 2 * m)
+        u, v = xb[:, :m], xb[:, m:]
+        w = tw[m : 2 * m]                # static slice — stage known at trace
+        t = sub_mod(u, v, q)
+        x = jnp.concatenate(
+            [add_mod(u, v, q), mont_mul(t, w[None, :], q, qinv)], axis=1
+        ).reshape(n)
+    return x
+
+
+def _inv_body(x, twist, tw, q, qinv, logn: int):
+    n = 1 << logn
+    for s in range(logn):                    # DIT: small blocks first
+        m = 1 << s
+        xb = x.reshape(n // (2 * m), 2 * m)
+        u, v = xb[:, :m], xb[:, m:]
+        w = tw[m : 2 * m]
+        vw = mont_mul(v, w[None, :], q, qinv)
+        x = jnp.concatenate(
+            [add_mod(u, vw, q), sub_mod(u, vw, q)], axis=1
+        ).reshape(n)
+    # psi^{-i} * n^{-1} post-twist folded into one Montgomery table
+    return mont_mul(x, twist, q, qinv)
+
+
+def _ntt_kernel(x_ref, twist_ref, tw_ref, q_ref, qinv_ref, o_ref,
+                *, logn: int, inverse: bool):
+    q = q_ref[0, 0]
+    qinv = qinv_ref[0, 0]
+    x = x_ref[0, :]
+    twist = twist_ref[0, :]
+    tw = tw_ref[0, :]
+    body = _inv_body if inverse else _fwd_body
+    o_ref[0, :] = body(x, twist, tw, q, qinv, logn)
+
+
+def ntt_pallas(x, twist, tw, q, qinv, *, logn: int, inverse: bool,
+               interpret: bool = True):
+    """x: (l, N) uint32; twist/tw: (l, N) uint32 Montgomery; q/qinv: (l, 1).
+
+    Grid walks limbs; each program transforms one polynomial in VMEM.
+    """
+    l, n = x.shape
+    assert n == 1 << logn
+    kernel = functools.partial(_ntt_kernel, logn=logn, inverse=inverse)
+    return pl.pallas_call(
+        kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint32),
+        interpret=interpret,
+    )(x, twist, tw, q, qinv)

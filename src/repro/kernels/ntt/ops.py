@@ -1,0 +1,111 @@
+"""jit'd wrappers + per-limb table precomputation for the NTT kernel."""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rns import RNSContext
+from repro.kernels.modops import qinv_neg_host, to_mont_host
+from repro.kernels.ntt.ntt import ntt_pallas
+from repro.kernels.ntt import ref as _ref
+
+
+class NTTKernelTables:
+    """Stacked per-limb uint32 tables (normal + Montgomery forms)."""
+
+    def __init__(self, rns: RNSContext):
+        self.rns = rns
+        self.logn = rns.params.logN
+        n = rns.params.N
+        primes = rns.all_primes
+        l = len(primes)
+
+        def flat_tw(stage_list, pi):
+            out = np.ones(n, dtype=np.uint64)
+            for s, tws in enumerate(stage_list):
+                m = 1 << s
+                out[m : 2 * m] = tws[pi]
+            return out
+
+        tw_f = np.stack([flat_tw(rns.stage_tw, i) for i in range(l)])
+        tw_i = np.stack([flat_tw(rns.stage_tw_inv, i) for i in range(l)])
+        twist_f = rns.psi_pows.astype(np.uint64)
+        twist_i = (
+            rns.psi_inv_pows.astype(object)
+            * rns.n_inv.astype(object)[:, None]
+            % rns.moduli.astype(object)[:, None]
+        )
+
+        self.q = rns.moduli.astype(np.uint32).reshape(l, 1)
+        self.qinv = np.array(
+            [qinv_neg_host(int(p)) for p in primes], dtype=np.uint32
+        ).reshape(l, 1)
+        # normal-form tables (for the oracle)
+        self.tw_f = tw_f
+        self.tw_i = tw_i
+        self.twist_f = twist_f
+        self.twist_i = twist_i.astype(np.uint64)
+        # Montgomery-form tables (for the kernel)
+        self.tw_f_m = np.stack(
+            [to_mont_host(tw_f[i], int(primes[i])) for i in range(l)]
+        )
+        self.tw_i_m = np.stack(
+            [to_mont_host(tw_i[i], int(primes[i])) for i in range(l)]
+        )
+        self.twist_f_m = np.stack(
+            [to_mont_host(twist_f[i], int(primes[i])) for i in range(l)]
+        )
+        self.twist_i_m = np.stack(
+            [to_mont_host(self.twist_i[i], int(primes[i])) for i in range(l)]
+        )
+
+    def rows(self, primes: tuple[int, ...]) -> np.ndarray:
+        return self.rns.limb_ids(primes)
+
+
+@lru_cache(maxsize=8)
+def tables_for(params) -> NTTKernelTables:
+    return NTTKernelTables(RNSContext(params))
+
+
+def ntt_fwd(x, primes, tables: NTTKernelTables, interpret: bool = True):
+    """(l, N) uint32 natural coeffs -> bit-reversed eval order."""
+    r = tables.rows(tuple(primes))
+    return ntt_pallas(
+        x.astype(jnp.uint32),
+        jnp.asarray(tables.twist_f_m[r]),
+        jnp.asarray(tables.tw_f_m[r]),
+        jnp.asarray(tables.q[r]),
+        jnp.asarray(tables.qinv[r]),
+        logn=tables.logn, inverse=False, interpret=interpret,
+    )
+
+
+def ntt_inv(x, primes, tables: NTTKernelTables, interpret: bool = True):
+    r = tables.rows(tuple(primes))
+    return ntt_pallas(
+        x.astype(jnp.uint32),
+        jnp.asarray(tables.twist_i_m[r]),
+        jnp.asarray(tables.tw_i_m[r]),
+        jnp.asarray(tables.q[r]),
+        jnp.asarray(tables.qinv[r]),
+        logn=tables.logn, inverse=True, interpret=interpret,
+    )
+
+
+def ntt_fwd_oracle(x, primes, tables: NTTKernelTables):
+    r = tables.rows(tuple(primes))
+    return _ref.ntt_fwd_ref(
+        x, jnp.asarray(tables.twist_f[r]), jnp.asarray(tables.tw_f[r]),
+        jnp.asarray(tables.q[r].astype(np.uint64)),
+    )
+
+
+def ntt_inv_oracle(x, primes, tables: NTTKernelTables):
+    r = tables.rows(tuple(primes))
+    return _ref.ntt_inv_ref(
+        x, jnp.asarray(tables.twist_i[r]), jnp.asarray(tables.tw_i[r]),
+        jnp.asarray(tables.q[r].astype(np.uint64)),
+    )

@@ -1,0 +1,47 @@
+"""Pure-jnp uint64 oracle for the NTT kernel (same DIF/DIT semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ntt_fwd_ref(x, twist, tw, q):
+    """x: (l, N) uint32 natural order; twist/tw NORMAL form (l, N) uint64;
+    q: (l, 1) uint64.  Returns (l, N) uint32, bit-reversed eval order."""
+    x = x.astype(jnp.uint64)
+    twist = twist.astype(jnp.uint64)
+    tw = tw.astype(jnp.uint64)
+    q = q.astype(jnp.uint64)
+    l, n = x.shape
+    logn = n.bit_length() - 1
+    x = (x * twist) % q
+    for s in range(logn - 1, -1, -1):
+        m = 1 << s
+        xb = x.reshape(l, n // (2 * m), 2 * m)
+        u, v = xb[..., :m], xb[..., m:]
+        w = tw[:, m : 2 * m][:, None, :]
+        q3 = q[:, :, None]
+        x = jnp.concatenate(
+            [(u + v) % q3, ((u + q3 - v) % q3 * w) % q3], axis=-1
+        ).reshape(l, n)
+    return x.astype(jnp.uint32)
+
+
+def ntt_inv_ref(x, twist, tw, q):
+    """Inverse: bit-reversed eval -> natural coeff; twist = psi^-i * n^-1."""
+    x = x.astype(jnp.uint64)
+    twist = twist.astype(jnp.uint64)
+    tw = tw.astype(jnp.uint64)
+    q = q.astype(jnp.uint64)
+    l, n = x.shape
+    logn = n.bit_length() - 1
+    for s in range(logn):
+        m = 1 << s
+        xb = x.reshape(l, n // (2 * m), 2 * m)
+        u, v = xb[..., :m], xb[..., m:]
+        w = tw[:, m : 2 * m][:, None, :]
+        q3 = q[:, :, None]
+        vw = (v * w) % q3
+        x = jnp.concatenate(
+            [(u + vw) % q3, (u + q3 - vw) % q3], axis=-1
+        ).reshape(l, n)
+    return ((x * twist) % q).astype(jnp.uint32)

@@ -1,0 +1,268 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real train/prefill/serve step against
+ShapeDtypeStruct inputs on the production mesh, compiles it, and records
+memory_analysis / cost_analysis / per-collective byte counts — the inputs
+to the roofline analysis (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3_medium_14b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+Results cached as JSON under results/dryrun/ (incremental).
+"""  # noqa: E402
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_config                    # noqa: E402
+from repro.configs.base import n_active_params                 # noqa: E402
+from repro.configs.shapes import SHAPES, shapes_for            # noqa: E402
+from repro.launch import plan as plan_mod                      # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.models.model import init_cache, init_params         # noqa: E402
+from repro.models.steps import (                               # noqa: E402
+    input_specs, make_prefill_step, make_serve_step, make_train_step,
+)
+from repro.train.optimizer import AdamW                        # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# post-partitioning HLO, e.g.:  %all-reduce.3 = f32[1024,256]{1,0}
+#   all-reduce(%dot), replica_groups=...
+_COLL_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\]\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the (pre-)optimized HLO."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[kind] += nbytes
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _eval_shapes(cfg, shape_kind, shape):
+    params_sds = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    out = {"params": params_sds}
+    if shape_kind == "train":
+        opt = AdamW(state_dtype=cfg.optimizer_state_dtype)
+        out["opt"] = jax.eval_shape(opt.init, params_sds)
+        out["optimizer"] = opt
+    if shape_kind == "decode":
+        out["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    return out
+
+
+def _with_cap1(c):
+    import dataclasses as _dc
+
+    return _dc.replace(c, moe=_dc.replace(c.moe, capacity_factor=1.0))
+
+
+VARIANTS = {
+    "base": lambda c: c,
+    "ce_softmax": lambda c: __import__("dataclasses").replace(
+        c, ce_impl="softmax"),
+    "expert_ff": lambda c: __import__("dataclasses").replace(
+        c, expert_shard="ff"),
+    "cap1": _with_cap1,
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             force: bool = False, variant: str = "base") -> dict:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    suffix = "" if variant == "base" else f"__{variant}"
+    out_path = RESULTS / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    cfg = VARIANTS[variant](get_config(arch))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    sds = _eval_shapes(cfg, shape.kind, shape)
+    batch_sds = input_specs(arch, shape_name)
+
+    p_plan = plan_mod.param_plan(cfg, mesh, sds["params"])
+    b_plan = plan_mod.batch_plan(mesh, batch_sds)
+
+    with mesh:
+        if shape.kind == "train":
+            o_plan = plan_mod.opt_plan(cfg, mesh, sds["opt"], p_plan)
+            step = make_train_step(cfg, sds["optimizer"])
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_plan, o_plan, b_plan),
+                out_shardings=(p_plan, o_plan, None),
+            )
+            lowered = jitted.lower(sds["params"], sds["opt"], batch_sds)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_plan, b_plan))
+            lowered = jitted.lower(sds["params"], batch_sds)
+        else:
+            c_plan = plan_mod.cache_plan(cfg, mesh, sds["cache"])
+            step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_plan, c_plan, b_plan),
+                out_shardings=(None, c_plan),
+            )
+            lowered = jitted.lower(sds["params"], sds["cache"], batch_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = {
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes",
+                                               None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes",
+                                             None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_info = {"error": str(e)}
+
+        # collectives are inserted by the SPMD partitioner — parse the
+        # POST-compile optimized HLO, not the lowered module
+        try:
+            hlo_post = compiled.as_text()
+        except Exception:
+            hlo_post = lowered.as_text()
+        coll = collective_bytes(hlo_post)
+
+    # analytic per-device parameter/state bytes (exact from the plan)
+    def _sharded_bytes(sds_tree, plans):
+        total = 0
+        for leaf, ns in zip(jax.tree.leaves(sds_tree),
+                            jax.tree.leaves(
+                                plans, is_leaf=lambda x: isinstance(
+                                    x, NamedSharding))):
+            shard_elems = np.prod(ns.shard_shape(leaf.shape)) \
+                if hasattr(ns, "shard_shape") else np.prod(leaf.shape)
+            total += int(shard_elems) * leaf.dtype.itemsize
+        return total
+
+    param_bytes_dev = _sharded_bytes(sds["params"], p_plan)
+    state_bytes_dev = param_bytes_dev
+    if shape.kind == "train":
+        state_bytes_dev += 2 * param_bytes_dev  # m, v (dtype-scaled below)
+
+    n_par = cfg.n_params()
+    n_act = n_active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_act * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_act * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_act * tokens
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant,
+        "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": t_lower, "compile_s": t_compile,
+        "hlo_flops": cost.get("flops"),
+        "hlo_bytes": cost.get("bytes accessed"),
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem_info,
+        "collectives": coll,
+        "param_bytes_per_device": param_bytes_dev,
+        "n_params": n_par, "n_active_params": n_act,
+        "model_flops": model_flops,
+        "tokens": tokens,
+    }
+    out_path.write_text(json.dumps(result, indent=2))
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_kind} ({variant}): "
+          f"compile {t_compile:.1f}s, HLO flops {cost.get('flops', 0):.3e}, "
+          f"collectives {coll['total_bytes']/1e9:.2f} GB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="base", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in shapes_for(arch):
+                for m in meshes:
+                    cells.append((arch, shape, m))
+    else:
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = []
+    for arch, shape, m in cells:
+        try:
+            run_cell(arch, shape, m, force=args.force,
+                     variant=args.variant)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape, m, str(e)))
+            (RESULTS / f"{arch}__{shape}__{m}.FAILED").write_text(
+                traceback.format_exc())
+    print(f"\n[dryrun] {len(cells) - len(failures)}/{len(cells)} cells ok")
+    for f in failures:
+        print("  FAILED:", f[:3])
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

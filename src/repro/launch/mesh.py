@@ -1,0 +1,51 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state — the dry-run must set XLA_FLAGS before any jax init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_small_mesh(devices: int = 8):
+    """Reduced mesh for in-CI dry-run tests (subprocess, 8 host devices)."""
+    return jax.make_mesh((devices // 4, 4), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Pure data-parallel axes (pod folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for a in dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+def batch_pspec(mesh, batch: int) -> P:
+    """Shard batch over DP axes when divisible, else replicate."""
+    axes = dp_axes(mesh)
+    if batch % dp_size(mesh) == 0:
+        return P(axes)
+    if "data" in axes and batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)
+
+
+def sharding(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,109 @@
+"""Sharding plans: mesh-aware specs for params, optimizer state, batches
+and decode caches, with divisibility sanitization (axes that do not
+divide a dimension are dropped rather than failing at lower time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_pspec, dp_axes
+from repro.models.model import param_specs
+
+
+def _axes_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    s = 1
+    for a in entry:
+        s *= mesh.shape[a]
+    return s
+
+
+def sanitize(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Drop spec axes that don't divide the corresponding dimension."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % _axes_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def sanitize_tree(specs, shapes, mesh):
+    return jax.tree.map(
+        lambda sp, sh: sanitize(sp, sh.shape, mesh), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_plan(cfg: ModelConfig, mesh, param_sds):
+    specs = param_specs(cfg, param_sds)
+    specs = sanitize_tree(specs, param_sds, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_plan(cfg: ModelConfig, mesh, opt_sds, param_shardings):
+    """m/v inherit the param sharding (ZeRO-style); step replicated."""
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_plan(mesh, batch_sds):
+    out = {}
+    for k, v in batch_sds.items():
+        if k in ("tokens", "labels"):
+            out[k] = NamedSharding(mesh, batch_pspec(mesh, v.shape[0]))
+        elif k == "positions":
+            bp = batch_pspec(mesh, v.shape[-2] if v.ndim == 3 else
+                             v.shape[0])
+            spec = P(None, *bp) if v.ndim == 3 else bp
+            out[k] = NamedSharding(mesh, spec)
+        elif k == "embeds":
+            out[k] = NamedSharding(
+                mesh, sanitize(P(dp_axes(mesh), None, None), v.shape, mesh))
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+def cache_plan(cfg: ModelConfig, mesh, cache_sds):
+    """Decode caches: batch over DP, long axes over 'model'.
+
+    KV seq axis is model-sharded (sequence-sharded KV attention) because
+    GQA head counts (often 8) don't divide the 16-way model axis; SSM
+    states shard their feature axis instead."""
+    dp = dp_axes(mesh)
+
+    def leaf_spec(name, sds):
+        sh = sds.shape
+        if name in ("k", "v"):          # (reps, B, S, KV, hd)
+            return sanitize(P(None, dp, "model", None, None), sh, mesh)
+        if name == "c_kv":              # (reps, B, S, rank)
+            return sanitize(P(None, dp, "model", None), sh, mesh)
+        if name == "k_rope":            # (reps, B, S, 1, rd)
+            return sanitize(P(None, dp, "model", None, None), sh, mesh)
+        if name == "conv":              # (reps, B, dc-1, di)
+            return sanitize(P(None, dp, None, "model"), sh, mesh)
+        if name == "ssm":               # (reps, B, di, ds)
+            return sanitize(P(None, dp, "model", None), sh, mesh)
+        if name == "C":                 # (reps, B, H, hd, hd)
+            return sanitize(P(None, dp, None, "model", None), sh, mesh)
+        if name == "n":                 # (reps, B, H, hd)
+            return sanitize(P(None, dp, None, "model"), sh, mesh)
+        if name in ("h", "c"):          # (reps, B, d)
+            return sanitize(P(None, dp, "model"), sh, mesh)
+        return P()
+
+    slots = []
+    for slot in cache_sds["slots"]:
+        slots.append({
+            k: NamedSharding(mesh, leaf_spec(k, v)) for k, v in slot.items()
+        })
+    return {"slots": slots, "idx": NamedSharding(mesh, P())}

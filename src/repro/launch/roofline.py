@@ -1,0 +1,112 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json:
+
+  compute term    = per-device HLO FLOPs / peak_FLOPs_per_chip
+  memory term     = per-device HLO bytes / HBM_bw
+  collective term = per-device collective bytes / ICI link bw
+
+(XLA's SPMD cost analysis is per-partition, i.e. already per-chip.)
+Hardware: TPU-v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+
+Also reports MODEL_FLOPS = 6*N(_active)*tokens and the useful-compute
+ratio MODEL_FLOPS/chips / HLO_FLOPs (remat/attention/redundancy factor).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh single]
+Writes results/roofline.json + a markdown table to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+def _scan_correction(r: dict) -> float:
+    """XLA cost analysis counts a while-loop (scan over layer reps) body
+    ONCE.  Correct: T = E + reps*(M - E), where E is the analytic
+    outside-loop cost (embedding/lm_head/loss) and M the measured total.
+    Returns the multiplier T/M (1.0 for unrolled models)."""
+    from repro.configs import get_config
+    from repro.models.model import layer_pattern
+
+    cfg = get_config(r["arch"])
+    if cfg.enc_dec:
+        return 1.0                      # whisper is unrolled
+    _, reps = layer_pattern(cfg)
+    if reps <= 1:
+        return 1.0
+    M = r.get("hlo_flops") or 0.0
+    if not M:
+        return 1.0
+    bwd = 3.0 if r["shape"].startswith("train") else 1.0
+    E = bwd * 2.0 * r["tokens"] * cfg.d_model * cfg.vocab / r["n_chips"]
+    E = min(E, 0.95 * M)
+    return (E + reps * (M - E)) / M
+
+
+def analyze_cell(r: dict) -> dict:
+    chips = r["n_chips"]
+    corr = _scan_correction(r)
+    flops_dev = (r.get("hlo_flops") or 0.0) * corr
+    bytes_dev = (r.get("hlo_bytes") or 0.0) * corr
+    coll_dev = r["collectives"]["total_bytes"] * corr
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = (r["model_flops"] / chips) / flops_dev if flops_dev else 0.0
+    # roofline fraction: useful-model-compute time / bound time
+    t_model = (r["model_flops"] / chips) / PEAK_FLOPS
+    frac = t_model / bound if bound else 0.0
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "bound_s": bound,
+        "useful_compute_ratio": useful,
+        "roofline_fraction": frac,
+        "model_flops_per_chip": r["model_flops"] / chips,
+        "scan_correction": corr,
+    }
+
+
+def load_cells(mesh: str):
+    out = {}
+    for p in sorted((RESULTS / "dryrun").glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh)
+    table = {}
+    print("| arch | shape | compute(s) | memory(s) | collective(s) | "
+          "dominant | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (arch, shape), r in cells.items():
+        a = analyze_cell(r)
+        table[f"{arch}__{shape}"] = {**a, "mesh": args.mesh,
+                                     "n_chips": r["n_chips"]}
+        print(f"| {arch} | {shape} | {a['t_compute_s']:.2e} | "
+              f"{a['t_memory_s']:.2e} | {a['t_collective_s']:.2e} | "
+              f"{a['dominant']} | {a['useful_compute_ratio']:.2f} | "
+              f"{a['roofline_fraction']:.3f} |")
+    (RESULTS / f"roofline_{args.mesh}.json").write_text(
+        json.dumps(table, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving driver: batched prefill + decode with a KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3_medium_14b \
+      --reduced --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models.model import forward, init_cache, init_params
+
+
+def generate(cfg, params, prompts: np.ndarray, gen: int):
+    """prompts: (B, P) int32 -> (B, P+gen) greedy continuation."""
+    B, P = prompts.shape
+    max_seq = P + gen
+    cache = init_cache(cfg, B, max_seq)
+    toks = jnp.asarray(prompts)
+
+    # teacher-forced prefill through the decode path (shares the cache
+    # machinery; production prefill uses the batched forward)
+    step = jax.jit(lambda p, c, t: forward(p, t, cfg, cache=c))
+    last = None
+    for t in range(P):
+        logits, cache = step(params, cache, toks[:, t : t + 1])
+        last = logits
+    out = [toks]
+    cur = jnp.argmax(last[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(gen):
+        out.append(cur)
+        logits, cache = step(params, cache, cur)
+        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3_medium_14b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.time()
+    out = generate(cfg, params, prompts, args.gen)
+    dt = time.time() - t0
+    total_new = args.batch * args.gen
+    print(f"[serve] {cfg.name}: generated {total_new} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s); output shape {out.shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm_3b \
+      --reduced --steps 100 --batch 8 --seq 128
+
+--reduced uses the smoke config (CPU-runnable end-to-end); the full
+configs are exercised via the dry-run.  Checkpoints/resume/elastic come
+from repro.train.trainer.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models.model import init_params
+from repro.train.optimizer import AdamW
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    print(f"[train] {cfg.name}: ~{cfg.n_params()/1e6:.1f}M params")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(PipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+    )
+    trainer = Trainer(cfg, tcfg, AdamW(lr=1e-3, warmup_steps=20))
+    params, _, losses = trainer.run(params, pipe,
+                                    resume=not args.no_resume)
+    n = max(len(losses) // 10, 1)
+    print(f"[train] loss {np.mean(losses[:n]):.4f} -> "
+          f"{np.mean(losses[-n:]):.4f} over {len(losses)} steps")
+    if trainer.stragglers:
+        print(f"[train] straggler steps flagged: {trainer.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

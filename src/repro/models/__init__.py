@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    forward, init_params, param_specs,
+)

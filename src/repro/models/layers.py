@@ -1,0 +1,522 @@
+"""Model building blocks for the 10 assigned architectures.
+
+Pure-pytree parameters (nested dicts of jnp arrays), explicit dtypes
+(bf16 weights/activations, f32 norms/softmax), KV/state caches as
+explicit arrays so decode steps lower cleanly on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+Param = dict
+
+
+def _norm_dt(x):
+    return x.astype(jnp.float32)
+
+
+def rms_norm(x, w, eps=1e-6):
+    xf = _norm_dt(x)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)) \
+        .astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = _norm_dt(x)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)) \
+        .astype(x.dtype)
+
+
+def apply_norm(x, p, kind):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["w"])
+    return layer_norm(x, p["w"], p["b"])
+
+
+# ------------------------------ RoPE -------------------------------------
+
+def _rope_cos_sin(pos, rot_dim, theta, dtype):
+    """pos: (..., S) int -> cos/sin (..., S, rot_dim/2)."""
+    inv = 1.0 / (theta ** (np.arange(0, rot_dim, 2) / rot_dim))
+    ang = pos[..., None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, pos, rope_pct=1.0, theta=10000.0, mrope_sections=None):
+    """x: (B, S, H, hd); pos: (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    rot = int(hd * rope_pct) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    if mrope_sections is not None:
+        # M-RoPE: split the rotary dim into (t, h, w) sections, each with
+        # its own position stream (identical streams for text tokens).
+        cos_parts, sin_parts = [], []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            c, s = _rope_cos_sin(pos[i], rot, theta, x.dtype)
+            cos_parts.append(c[..., start // 2 : (start + sec) // 2])
+            sin_parts.append(s[..., start // 2 : (start + sec) // 2])
+            start += sec
+        cos = jnp.concatenate(cos_parts, axis=-1)
+        sin = jnp.concatenate(sin_parts, axis=-1)
+    else:
+        cos, sin = _rope_cos_sin(pos, rot, theta, x.dtype)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    xrot = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return jnp.concatenate([xrot, xp], axis=-1) if rot < hd else xrot
+
+
+def mrope_sections(rot_dim):
+    """(t, h, w) rotary sections — Qwen2-VL convention (16/24/24 scaled)."""
+    t = rot_dim // 4 * 2
+    rem = rot_dim - t
+    h = rem // 2 // 2 * 2
+    return (t, h, rot_dim - t - h)
+
+
+# --------------------------- dense attention -----------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, H * hd), dtype) * std,
+        "wk": jax.random.normal(k2, (d, KV * hd), dtype) * std,
+        "wv": jax.random.normal(k3, (d, KV * hd), dtype) * std,
+        "wo": jax.random.normal(k4, (H * hd, d), dtype) * std,
+    }
+    if cfg.bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd) — GQA via head grouping."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    q = q.reshape(B, Sq, KV, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, v.shape[-1])  # v head dim != q under MLA
+
+
+def attention(p, x, cfg: ModelConfig, pos, cache=None, window=0):
+    """Returns (out, new_cache).  cache: dict(k, v, (B,Sc,KV,hd), idx)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    sections = mrope_sections(int(hd * cfg.rope_pct)) \
+        if cfg.pos == "mrope" else None
+    if cfg.pos in ("rope", "mrope"):
+        q = apply_rope(q, pos, cfg.rope_pct, cfg.rope_theta, sections)
+        k = apply_rope(k, pos, cfg.rope_pct, cfg.rope_theta, sections)
+
+    if cache is None:
+        # train/prefill: causal (optionally windowed) self-attention
+        ar = jnp.arange(S)
+        mask = ar[None, :, None] >= ar[None, None, :]
+        if window:
+            mask &= ar[None, :, None] - ar[None, None, :] < window
+        out = _sdpa(q, k, v, jnp.broadcast_to(mask, (B, S, S)))
+        new_cache = {"k": k, "v": v}
+    else:
+        # decode: S == 1; write into the (ring) buffer at cache["idx"]
+        Sc = cache["k"].shape[1]
+        idx = cache["idx"]                      # scalar int32
+        slot = (idx % Sc if window else idx).astype(jnp.int32)
+        z = jnp.int32(0)                        # x64-safe index literals
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k, (z, slot, z, z))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v, (z, slot, z, z))
+        valid = jnp.arange(Sc)[None, :] <= (idx if not window
+                                            else jnp.int32(Sc))
+        if window:
+            valid = jnp.arange(Sc)[None, :] < jnp.minimum(idx + 1, Sc)
+        mask = jnp.broadcast_to(valid[:, None, :], (B, 1, Sc))
+        out = _sdpa(q, ck, cv, mask)
+        new_cache = {"k": ck, "v": cv, "idx": idx + 1}
+    return out.reshape(B, S, H * hd) @ p["wo"], new_cache
+
+
+# ------------------------------- MLA -------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": jax.random.normal(ks[0], (d, m.q_lora_rank), dtype) * std,
+        "wq_b": jax.random.normal(
+            ks[1], (m.q_lora_rank, H * qk_dim), dtype) * std,
+        "wkv_a": jax.random.normal(
+            ks[2], (d, m.kv_lora_rank + m.qk_rope_dim), dtype) * std,
+        "wkv_b": jax.random.normal(
+            ks[3], (m.kv_lora_rank, H * (m.qk_nope_dim + m.v_head_dim)),
+            dtype) * std,
+        "wo": jax.random.normal(
+            ks[4], (H * m.v_head_dim, d), dtype) * std,
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+    }
+
+
+def mla_attention(p, x, cfg: ModelConfig, pos, cache=None):
+    """Multi-head Latent Attention (MiniCPM3/DeepSeek-style).
+
+    The KV cache stores only the compressed latent c_kv (+ rope key) —
+    the architecture's signature memory saving."""
+    m: MLAConfig = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+
+    q = rms_norm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+
+    kv_a = x @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = kv_a[..., m.kv_lora_rank :].reshape(B, S, 1, m.qk_rope_dim)
+
+    q_rope = apply_rope(q_rope, pos, 1.0, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, pos, 1.0, cfg.rope_theta)
+
+    if cache is not None:
+        idx = cache["idx"].astype(jnp.int32)
+        z = jnp.int32(0)                        # x64-safe index literals
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv, (z, idx, z))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope, (z, idx, z, z))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope, "idx": idx + 1}
+        Sk = c_kv.shape[1]
+        valid = jnp.arange(Sk)[None, :] <= idx
+    else:
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        Sk = S
+        ar = jnp.arange(S)
+        valid = None
+
+    kv = (c_kv @ p["wkv_b"]).reshape(B, Sk, H, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, Sk, 1, m.qk_rope_dim))
+         .repeat(H, axis=2)], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if cache is None:
+        mask = jnp.broadcast_to(
+            ar[None, :, None] >= ar[None, None, :], (B, S, S))
+    else:
+        mask = jnp.broadcast_to(valid[:, None, :], (B, 1, Sk))
+    out = _sdpa(qfull, k, v, mask)
+    return out.reshape(B, S, H * m.v_head_dim) @ p["wo"], new_cache
+
+
+# ------------------------------- MLPs ------------------------------------
+
+def init_mlp(key, d, d_ff, kind, dtype, bias=False):
+    ks = jax.random.split(key, 3)
+    std = d ** -0.5
+    p = {"up": jax.random.normal(ks[0], (d, d_ff), dtype) * std,
+         "down": jax.random.normal(ks[1], (d_ff, d), dtype) * (d_ff ** -0.5)}
+    if kind == "swiglu":
+        p["gate"] = jax.random.normal(ks[2], (d, d_ff), dtype) * std
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp(p, x, kind):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = x @ p["up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = jax.nn.gelu(h)
+    out = h @ p["down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# ------------------------------- MoE --------------------------------------
+
+def init_moe(key, d, mo: MoEConfig, kind, dtype):
+    ks = jax.random.split(key, 5)
+    E, f = mo.n_experts, mo.d_expert_ff
+    std = d ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * std,
+        "up": jax.random.normal(ks[1], (E, d, f), dtype) * std,
+        "gate": jax.random.normal(ks[2], (E, d, f), dtype) * std,
+        "down": jax.random.normal(ks[3], (E, f, d), dtype) * (f ** -0.5),
+    }
+    if mo.dense_residual_ff:
+        p["dense"] = init_mlp(ks[4], d, mo.dense_residual_ff, kind, dtype)
+    return p
+
+
+def moe(p, x, mo: MoEConfig, kind):
+    """Sort-based top-k dispatch with static capacity (EP-friendly).
+
+    x: (B, S, d) -> (B, S, d).  FLOPs scale with top_k (not n_experts)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = mo.n_experts, mo.top_k
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                  # (T, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    cap = int(np.ceil(T * k / E * mo.capacity_factor))
+    cap = max(cap, 1)
+    flat_e = eidx.reshape(-1)                              # (T*k,)
+    order = jnp.argsort(flat_e)                            # stable
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < cap
+    tok = order // k                                       # source token
+    buf = jnp.zeros((E, cap, d), xt.dtype)
+    buf = buf.at[sorted_e, jnp.where(keep, pos, cap - 1)].add(
+        jnp.where(keep[:, None], xt[tok], 0))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["down"])       # (E, cap, d)
+
+    y_flat = out_e[sorted_e, jnp.where(keep, pos, cap - 1)]
+    y_flat = jnp.where(keep[:, None], y_flat, 0)
+    gate_flat = gates.reshape(-1)[order]
+    y = jnp.zeros((T, d), xt.dtype).at[tok].add(
+        y_flat * gate_flat[:, None].astype(xt.dtype))
+    y = y.reshape(B, S, d)
+    if "dense" in p:
+        y = y + mlp(p["dense"], x, kind)
+    return y
+
+
+# ------------------------------- Mamba ------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds, dc = cfg.mamba_d_state, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * std,
+        "conv_w": jax.random.normal(ks[1], (dc, di), dtype) * 0.1,
+        "x_proj": jax.random.normal(ks[2], (di, ds * 2 + 1), dtype) * std,
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), dtype) * std,
+    }
+
+
+def mamba(p, x, cfg: ModelConfig, cache=None):
+    """Selective SSM (Mamba-1 style) via associative scan.
+
+    cache (decode): {"conv": (B, dc-1, di), "ssm": (B, di, ds), "idx"}."""
+    B, S, d = x.shape
+    di = cfg.mamba_expand * d
+    ds, dc = cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = x @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+
+    if cache is None:
+        pad = jnp.zeros((B, dc - 1, di), xi.dtype)
+        xc = jnp.concatenate([pad, xi], axis=1)
+        conv = sum(
+            xc[:, i : i + S] * p["conv_w"][i][None, None, :]
+            for i in range(dc)
+        )
+        new_conv = xc[:, -(dc - 1):] if dc > 1 else pad
+    else:
+        hist = jnp.concatenate([cache["conv"], xi], axis=1)  # (B, dc, di)
+        conv = sum(
+            hist[:, i : i + S] * p["conv_w"][i][None, None, :]
+            for i in range(dc)
+        )
+        new_conv = hist[:, 1:]
+    u = jax.nn.silu(conv)
+
+    proj = u @ p["x_proj"]
+    dt = jax.nn.softplus(
+        proj[..., -1:].astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+    Bm = proj[..., :ds].astype(jnp.float32)               # (B,S,ds)
+    Cm = proj[..., ds : 2 * ds].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                               # (di, ds)
+
+    # h_t = a_t * h_{t-1} + b_t ;  a_t=(B,S,di,ds), b_t likewise
+    a = jnp.exp(dt[..., None] * A[None, None, :, :])
+    b = (dt[..., None] * Bm[:, :, None, :]) \
+        * u.astype(jnp.float32)[..., None]
+    if cache is None:
+        def comb(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        aa, hh = jax.lax.associative_scan(comb, (a, b), axis=1)
+        new_ssm = hh[:, -1]
+    else:
+        hh = a * cache["ssm"][:, None] + b
+        new_ssm = hh[:, -1]
+    y = jnp.einsum("bsdn,bsn->bsd", hh, Cm)
+    y = y + u.astype(jnp.float32) * p["D"][None, None, :]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": new_ssm,
+                     "idx": cache["idx"] + 1}
+    return out, new_cache
+
+
+# ------------------------------- xLSTM ------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    H = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "up": jax.random.normal(ks[0], (d, 2 * di), dtype) * std,
+        "wq": jax.random.normal(ks[1], (di, di), dtype) * (di ** -0.5),
+        "wk": jax.random.normal(ks[2], (di, di), dtype) * (di ** -0.5),
+        "wv": jax.random.normal(ks[3], (di, di), dtype) * (di ** -0.5),
+        "wif": jax.random.normal(ks[4], (di, 2 * H), jnp.float32) * std,
+        "down": jax.random.normal(ks[5], (di, d), dtype) * (di ** -0.5),
+    }
+
+
+def mlstm(p, x, cfg: ModelConfig, cache=None):
+    """mLSTM block (matrix memory, exponential gating).
+
+    Train/prefill uses the quadratic-within-sequence parallel form with a
+    stabilized log-gate cumulative matrix; decode updates the (H, hd, hd)
+    matrix state recurrently."""
+    B, S, d = x.shape
+    di = cfg.mamba_expand * d
+    H = cfg.n_heads
+    hd = di // H
+    uz = x @ p["up"]
+    u, z = uz[..., :di], uz[..., di:]
+    q = (u @ p["wq"]).reshape(B, S, H, hd)
+    k = (u @ p["wk"]).reshape(B, S, H, hd) / np.sqrt(hd)
+    v = (u @ p["wv"]).reshape(B, S, H, hd)
+    gates = (u @ p["wif"].astype(u.dtype)).astype(jnp.float32)
+    ig = gates[..., :H]                                # (B,S,H) input gate
+    fg = jax.nn.log_sigmoid(gates[..., H:])            # log forget gate
+
+    if cache is None:
+        # D[b,h,t,s] = F_t - F_s + i_s  (s <= t), stabilized by row max
+        F = jnp.cumsum(fg, axis=1)                     # (B,S,H)
+        Ft = F.transpose(0, 2, 1)                      # (B,H,S)
+        D = Ft[:, :, :, None] - Ft[:, :, None, :] \
+            + ig.transpose(0, 2, 1)[:, :, None, :]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        D = jnp.where(mask[None, None], D, -jnp.inf)
+        m = jnp.max(D, axis=-1, keepdims=True)
+        Dn = jnp.exp(D - m)                            # (B,H,S,S)
+        att = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * Dn
+        norm = jnp.maximum(
+            jnp.abs(jnp.sum(att, axis=-1, keepdims=True)),
+            jnp.exp(-m))
+        out = jnp.einsum("bhqs,bshd->bqhd",
+                         (att / norm).astype(v.dtype), v)
+        new_cache = None
+    else:
+        # recurrent: C <- f*C + i*(v k^T); n <- f*n + i*k
+        i_t = jnp.exp(ig[:, 0]).astype(jnp.float32)    # (B,H)
+        f_t = jnp.exp(fg[:, 0]).astype(jnp.float32)
+        C = cache["C"] * f_t[..., None, None] + i_t[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", v[:, 0].astype(jnp.float32),
+                       k[:, 0].astype(jnp.float32))
+        n = cache["n"] * f_t[..., None] + i_t[..., None] \
+            * k[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhde,bhe->bhd", C, q[:, 0].astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n,
+                               q[:, 0].astype(jnp.float32))), 1.0)
+        out = (num / den[..., None]).astype(x.dtype)[:, None]
+        new_cache = {"C": C, "n": n, "idx": cache["idx"] + 1}
+    out = out.reshape(B, S, di) * jax.nn.silu(z)
+    return out @ p["down"], new_cache
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    std = d ** -0.5
+    return {
+        "w": jax.random.normal(ks[0], (d, 4 * d), dtype) * std,
+        "r": jax.random.normal(ks[1], (d, 4 * d), dtype) * std,
+    }
+
+
+def slstm(p, x, cfg: ModelConfig, cache=None):
+    """sLSTM (scalar memory, sequential scan over tokens)."""
+    B, S, d = x.shape
+
+    def step(carry, xt):
+        h, c = carry
+        g = xt @ p["w"] + h @ p["r"]
+        i, f, z, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jnp.exp(
+            jnp.minimum(i, 0.0)) * jnp.tanh(z)
+        h = (jax.nn.sigmoid(o) * jnp.tanh(c)).astype(xt.dtype)
+        return (h, c), h
+
+    if cache is None:
+        h0 = jnp.zeros((B, d), x.dtype)
+        c0 = jnp.zeros((B, d), jnp.float32)
+        (_, _), ys = jax.lax.scan(step, (h0, c0), x.transpose(1, 0, 2))
+        return ys.transpose(1, 0, 2), None
+    (h, c), ys = step((cache["h"], cache["c"]), x[:, 0])
+    return ys[:, None] if ys.ndim == 2 else ys, \
+        {"h": h, "c": c, "idx": cache["idx"] + 1}

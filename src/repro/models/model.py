@@ -1,0 +1,460 @@
+"""Architecture assembly: init / forward / sharding specs for all 10
+assigned architectures.
+
+Layers are stacked into repeating "pattern" super-blocks (period = 1 for
+homogeneous stacks, 8 for jamba/xlstm interleaves) and executed with
+jax.lax.scan — compact HLO for the 512-device dry-run.  Whisper (6+6
+enc-dec) is unrolled.
+
+Caches are explicit stacked arrays so ``decode`` lowers as a single step
+on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# --------------------------- layer pattern -------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str   # attn | mla | mamba | mlstm | slstm
+    ffn: str     # dense | moe | none
+
+
+def layer_pattern(cfg: ModelConfig) -> tuple[list[LayerSpec], int]:
+    """(pattern, n_reps) with n_layers == len(pattern) * n_reps."""
+    specs = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            mixer = ("slstm" if cfg.slstm_every and
+                     i % cfg.slstm_every == cfg.slstm_every - 1 else "mlstm")
+            ffn = "none"
+        elif cfg.attn_every:
+            mixer = ("attn" if i % cfg.attn_every == cfg.attn_every - 1
+                     else "mamba")
+            ffn = ("moe" if cfg.moe and i % cfg.moe.every == 0 else "dense")
+        else:
+            mixer = cfg.attn if cfg.attn in ("mla",) else "attn"
+            ffn = ("moe" if cfg.moe and i % cfg.moe.every == 0 else "dense")
+        specs.append(LayerSpec(mixer, ffn))
+    # smallest period
+    for period in range(1, cfg.n_layers + 1):
+        if cfg.n_layers % period == 0 and all(
+            specs[i] == specs[i % period] for i in range(cfg.n_layers)
+        ):
+            return specs[:period], cfg.n_layers // period
+    return specs, 1
+
+
+# ------------------------------ init --------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": _norm_p(cfg, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    elif spec.mixer == "mla":
+        p["attn"] = L.init_mla(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = L.init_mamba(ks[0], cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = L.init_mlstm(ks[0], cfg, dtype)
+    elif spec.mixer == "slstm":
+        p["slstm"] = L.init_slstm(ks[0], cfg, dtype)
+    if spec.ffn != "none":
+        p["norm2"] = _norm_p(cfg, dtype)
+        if spec.ffn == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg.d_model, cfg.moe, cfg.mlp,
+                                  dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp,
+                                  dtype, cfg.bias)
+    return p
+
+
+def _norm_p(cfg, dtype):
+    p = {"w": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    dtype = jnp.dtype(cfg.dtype)
+    pattern, reps = layer_pattern(cfg)
+    keys = jax.random.split(key, reps * len(pattern) + 4)
+    params = {
+        "embed": jax.random.normal(
+            keys[-1], (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "final_norm": _norm_p(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[-2], (cfg.d_model, cfg.vocab), dtype) * 0.02
+    # stacked blocks: blocks[slot] has leading rep axis
+    blocks = []
+    for s, spec in enumerate(pattern):
+        reps_p = [
+            _init_layer(keys[r * len(pattern) + s], cfg, spec, dtype)
+            for r in range(reps)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps_p))
+    params["blocks"] = blocks
+
+    if cfg.enc_dec:
+        enc = []
+        ek = jax.random.split(keys[-3], cfg.n_enc_layers + 1)
+        for i in range(cfg.n_enc_layers):
+            enc.append({
+                "norm1": _norm_p(cfg, dtype),
+                "attn": L.init_attention(ek[i], cfg, dtype),
+                "norm2": _norm_p(cfg, dtype),
+                "mlp": L.init_mlp(ek[i], cfg.d_model, cfg.d_ff, cfg.mlp,
+                                  dtype, cfg.bias),
+            })
+        params["encoder"] = enc
+        # decoder cross-attention, one per decoder layer (unrolled)
+        xk = jax.random.split(keys[-4], cfg.n_layers)
+        params["cross"] = [
+            {"norm": _norm_p(cfg, dtype),
+             "attn": L.init_attention(xk[i], cfg, dtype)}
+            for i in range(cfg.n_layers)
+        ]
+    return params
+
+
+# ------------------------------ caches ------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Stacked per-slot caches for decode, matching layer_pattern."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    pattern, reps = layer_pattern(cfg)
+    di = cfg.mamba_expand * cfg.d_model
+    hd_i = di // cfg.n_heads
+    caches = []
+    window = cfg.sliding_window if (cfg.sliding_window and
+                                    max_seq > cfg.sliding_window) else 0
+    for spec in pattern:
+        if spec.mixer in ("attn",):
+            Sc = window or max_seq
+            c = {
+                "k": jnp.zeros((reps, batch, Sc, cfg.n_kv_heads, cfg.hd),
+                               dtype),
+                "v": jnp.zeros((reps, batch, Sc, cfg.n_kv_heads, cfg.hd),
+                               dtype),
+            }
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            c = {
+                "c_kv": jnp.zeros((reps, batch, max_seq, m.kv_lora_rank),
+                                  dtype),
+                "k_rope": jnp.zeros((reps, batch, max_seq, 1,
+                                     m.qk_rope_dim), dtype),
+            }
+        elif spec.mixer == "mamba":
+            c = {
+                "conv": jnp.zeros((reps, batch, cfg.mamba_d_conv - 1, di),
+                                  dtype),
+                "ssm": jnp.zeros((reps, batch, di, cfg.mamba_d_state),
+                                 jnp.float32),
+            }
+        elif spec.mixer == "mlstm":
+            c = {
+                "C": jnp.zeros((reps, batch, cfg.n_heads, hd_i, hd_i),
+                               jnp.float32),
+                "n": jnp.zeros((reps, batch, cfg.n_heads, hd_i),
+                               jnp.float32),
+            }
+        else:  # slstm
+            c = {
+                "h": jnp.zeros((reps, batch, cfg.d_model), dtype),
+                "c": jnp.zeros((reps, batch, cfg.d_model), jnp.float32),
+            }
+        caches.append(c)
+    return {"slots": caches, "idx": jnp.zeros((), jnp.int32)}
+
+
+# ------------------------------ forward -----------------------------------
+
+def _apply_layer(p, x, cfg, spec: LayerSpec, pos, cache, idx, window):
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    if spec.mixer == "attn":
+        c = None if cache is None else {**cache, "idx": idx}
+        o, nc = L.attention(p["attn"], h, cfg, pos, c, window)
+    elif spec.mixer == "mla":
+        c = None if cache is None else {**cache, "idx": idx}
+        o, nc = L.mla_attention(p["attn"], h, cfg, pos, c)
+    elif spec.mixer == "mamba":
+        c = None if cache is None else {**cache, "idx": idx}
+        o, nc = L.mamba(p["mamba"], h, cfg, c)
+    elif spec.mixer == "mlstm":
+        c = None if cache is None else {**cache, "idx": idx}
+        o, nc = L.mlstm(p["mlstm"], h, cfg, c)
+    else:
+        c = None if cache is None else {**cache, "idx": idx}
+        o, nc = L.slstm(p["slstm"], h, cfg, c)
+    x = x + o
+    if spec.ffn != "none":
+        h2 = L.apply_norm(x, p["norm2"], cfg.norm)
+        if spec.ffn == "moe":
+            x = x + L.moe(p["moe"], h2, cfg.moe, cfg.mlp)
+        else:
+            x = x + L.mlp(p["mlp"], h2, cfg.mlp)
+    if nc is not None:
+        nc.pop("idx", None)
+    return x, nc
+
+
+def forward(params, tokens, cfg: ModelConfig, positions=None, cache=None,
+            embeds=None):
+    """tokens: (B, S) int32.  cache=None -> full causal pass (train /
+    prefill); cache -> one decode step (S == 1).  embeds: stub modality
+    embeddings replacing the first tokens (vlm) / encoder input (audio).
+
+    Returns (logits, new_cache_or_None).
+    """
+    if cfg.enc_dec:
+        return _forward_encdec(params, tokens, cfg, cache, embeds)
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if embeds is not None:
+        n_p = embeds.shape[1]
+        x = jnp.concatenate([embeds.astype(dtype), x[:, n_p:]], axis=1)
+    if positions is None:
+        base = jnp.arange(S)[None, :] if cache is None \
+            else (cache["idx"] + jnp.zeros((1, 1), jnp.int32))
+        positions = jnp.broadcast_to(base, (B, S))
+        if cfg.pos == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+    if cfg.pos == "learned":
+        # sinusoidal (shape-agnostic — Whisper's encoder convention)
+        pos0 = jnp.arange(S) if cache is None else cache["idx"][None]
+        x = x + _sinusoid(pos0, cfg.d_model, x.dtype)[None]
+
+    pattern, reps = layer_pattern(cfg)
+    window = _active_window(cfg, pattern, cache, S)
+    idx = None if cache is None else cache["idx"]
+
+    def body(x_carry, xs):
+        slot_params, slot_caches = xs
+        x_c = x_carry
+        new_caches = []
+        for s, spec in enumerate(pattern):
+            c = None if slot_caches is None else slot_caches[s]
+            w = window if spec.mixer == "attn" else 0
+            x_c, nc = _apply_layer(slot_params[s], x_c, cfg, spec,
+                                   positions, c, idx, w)
+            new_caches.append(nc if nc is not None else {})
+        return x_c, tuple(new_caches)
+
+    if reps > 1:
+        xs_params = tuple(params["blocks"])
+        xs_caches = (None if cache is None
+                     else tuple(cache["slots"]))
+
+        def scan_body(x_carry, xs):
+            if cache is None:
+                sp = xs
+                sc = None
+            else:
+                sp, sc = xs
+            return body(x_carry, (sp, sc))
+
+        xs = xs_params if cache is None else (xs_params, xs_caches)
+        x, ys = jax.lax.scan(scan_body, x, xs)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"slots": list(ys), "idx": cache["idx"] + 1}
+    else:
+        new_slots = []
+        for s, spec in enumerate(pattern):
+            p_s = jax.tree.map(lambda a: a[0], params["blocks"][s])
+            c = None if cache is None else \
+                jax.tree.map(lambda a: a[0], cache["slots"][s])
+            w = window if spec.mixer == "attn" else 0
+            x, nc = _apply_layer(p_s, x, cfg, spec, positions, c, idx, w)
+            new_slots.append(jax.tree.map(lambda a: a[None], nc or {}))
+        new_cache = None
+        if cache is not None:
+            new_cache = {"slots": new_slots, "idx": cache["idx"] + 1}
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params.get("lm_head", params["embed"].T)
+    logits = (x @ head).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _sinusoid(pos, d, dtype):
+    """(S,) -> (S, d) sinusoidal position embedding (shape-agnostic)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = pos[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1).astype(dtype)
+
+
+def _active_window(cfg: ModelConfig, pattern, cache, S: int) -> int:
+    """Sliding-window attention is active when configured AND either the
+    decode cache is window-sized (ring buffer, long_500k) or a full pass
+    exceeds the window."""
+    if not cfg.sliding_window:
+        return 0
+    if cache is None:
+        return cfg.sliding_window if S > cfg.sliding_window else 0
+    for i, s in enumerate(pattern):
+        if s.mixer == "attn" and "k" in cache["slots"][i]:
+            sc = cache["slots"][i]["k"].shape[2]
+            return cfg.sliding_window if sc == cfg.sliding_window else 0
+    return 0
+
+
+def _forward_encdec(params, tokens, cfg, cache, embeds):
+    """Whisper: embeds = (B, T_audio, d_model) stub frame embeddings."""
+    dtype = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    if embeds is None:
+        embeds = jnp.zeros((B, 128, cfg.d_model), dtype)
+    e = embeds.astype(dtype) + _sinusoid(
+        jnp.arange(embeds.shape[1]), cfg.d_model, dtype)[None]
+    Ta = e.shape[1]
+    full = jnp.ones((B, Ta, Ta), bool)
+    for lp in params["encoder"]:
+        h = L.apply_norm(e, lp["norm1"], cfg.norm)
+        e = e + _bidir_attention(lp["attn"], h, cfg, full)
+        e = e + L.mlp(lp["mlp"], L.apply_norm(e, lp["norm2"], cfg.norm),
+                      cfg.mlp)
+
+    S = tokens.shape[1]
+    x = params["embed"][tokens].astype(dtype)
+    pos0 = jnp.arange(S) if cache is None else cache["idx"][None]
+    x = x + _sinusoid(pos0, cfg.d_model, dtype)[None]
+    pattern, reps = layer_pattern(cfg)
+    idx = None if cache is None else cache["idx"]
+    new_slots = []
+    for i in range(cfg.n_layers):
+        p_i = jax.tree.map(lambda a: a[i], params["blocks"][0])
+        c = None if cache is None else \
+            jax.tree.map(lambda a: a[i], cache["slots"][0])
+        x, nc = _apply_layer(p_i, x, cfg, pattern[0], None, c, idx, 0)
+        new_slots.append(nc or {})
+        # cross-attention to encoder output
+        cp = params["cross"][i]
+        h = L.apply_norm(x, cp["norm"], cfg.norm)
+        x = x + _cross_attention(cp["attn"], h, e, cfg)
+    new_cache = None
+    if cache is not None:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_slots)
+        new_cache = {"slots": [stacked], "idx": cache["idx"] + 1}
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _bidir_attention(p, x, cfg, mask):
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    out = L._sdpa(q, k, v, mask)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def _cross_attention(p, x, enc, cfg):
+    B, S, d = x.shape
+    Ta = enc.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (enc @ p["wk"]).reshape(B, Ta, KV, hd)
+    v = (enc @ p["wv"]).reshape(B, Ta, KV, hd)
+    mask = jnp.ones((B, S, Ta), bool)
+    out = L._sdpa(q, k, v, mask)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+# --------------------------- sharding specs --------------------------------
+
+def param_specs(cfg: ModelConfig, params=None):
+    """PartitionSpec tree mirroring init_params (GSPMD/NamedSharding).
+
+    'model' = tensor/expert parallel, 'data' = FSDP when cfg.fsdp.
+    Stacked blocks get a leading None (rep) axis.
+    """
+    f = "data" if cfg.fsdp else None
+
+    def spec_for(path: str, ndim: int, stacked: bool):
+        lead = (None,) if stacked else ()
+        name = path.split("/")[-1]
+        table = {
+            "wq": P(*lead, f, "model"), "wk": P(*lead, f, "model"),
+            "wv": P(*lead, f, "model"), "wo": P(*lead, "model", f),
+            "bq": P(*lead, "model"), "bk": P(*lead, "model"),
+            "bv": P(*lead, "model"),
+            "wq_a": P(*lead, f, None), "wq_b": P(*lead, None, "model"),
+            "wkv_a": P(*lead, f, None), "wkv_b": P(*lead, None, "model"),
+            "up": P(*lead, f, "model"), "gate": P(*lead, f, "model"),
+            "down": P(*lead, "model", f),
+            "b_up": P(*lead, "model"), "b_down": P(*lead, None),
+            "router": P(*lead, None, None),
+            "in_proj": P(*lead, f, "model"),
+            "conv_w": P(*lead, None, "model"),
+            "x_proj": P(*lead, "model", None),
+            "out_proj": P(*lead, "model", f),
+            "A_log": P(*lead, "model", None), "D": P(*lead, "model"),
+            "dt_bias": P(*lead, "model"),
+            "w": P(*lead, None) if ndim == 1 + len(lead)
+            else P(*lead, f, "model"),
+            "r": P(*lead, f, "model"),
+            "b": P(*lead, None),
+            "q_norm": P(*lead, None), "kv_norm": P(*lead, None),
+            "wif": P(*lead, "model", None),
+        }
+        # MoE expert tensors carry a leading expert axis -> expert-parallel
+        if name in ("up", "gate", "down") and ndim == 3 + len(lead):
+            if cfg.expert_shard == "ff" and f:
+                # FSDP axis on the expert HIDDEN dim: the dispatch einsum
+                # contracts an UNsharded d_model, killing the per-layer
+                # (E, cap, f) cross-data collective (§Perf hypothesis H2)
+                return {"up": P(*lead, "model", None, f),
+                        "gate": P(*lead, "model", None, f),
+                        "down": P(*lead, "model", f, None)}[name]
+            return {"up": P(*lead, "model", f, None),
+                    "gate": P(*lead, "model", f, None),
+                    "down": P(*lead, "model", None, f)}[name]
+        return table.get(name, P(*lead, *([None] * (ndim - len(lead)))))
+
+    params = params if params is not None else init_params(cfg)
+
+    def walk(tree, stacked, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, stacked, f"{prefix}/{k}") for k, v in
+                    tree.items()}
+        if isinstance(tree, list):
+            return [walk(v, stacked, prefix) for v in tree]
+        return spec_for(prefix, tree.ndim, stacked)
+
+    out = {}
+    for k, v in params.items():
+        if k == "embed":
+            out[k] = P("model", None)
+        elif k == "lm_head":
+            out[k] = P(None, "model")
+        elif k == "blocks":
+            out[k] = [walk(b, True) for b in v]
+        elif k in ("encoder", "cross"):
+            out[k] = walk(v, False)
+        else:
+            out[k] = walk(v, False)
+    return out

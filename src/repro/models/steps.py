@@ -1,0 +1,118 @@
+"""train_step / serve_step builders + ShapeDtypeStruct input specs.
+
+``input_specs(arch, shape)`` returns weak-type-correct stand-ins for
+every model input — the dry-run lowers against these without allocating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models.model import forward, init_cache, init_params
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = forward(
+        params, batch["tokens"], cfg,
+        positions=batch.get("positions"),
+        embeds=batch.get("embeds"),
+    )
+    labels = batch["labels"]
+    if cfg.ce_impl == "softmax":      # baseline: full (B,S,V) log-softmax
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    else:
+        # CE via logsumexp + gather: never materializes the (B, S, V) f32
+        # log-softmax array (the full-vocab normalized tensor is the
+        # largest single memory consumer for 100k-256k vocabularies —
+        # EXPERIMENTS.md §Perf hillclimb, hypothesis H1)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, labels[..., None], axis=-1)[..., 0]
+        ll = picked - lse
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, optimizer):
+    """optimizer: repro.train.optimizer.AdamW-like (init/update)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        """One decode step: batch["tokens"] is (B, 1)."""
+        logits, cache = forward(
+            params, batch["tokens"], cfg,
+            positions=batch.get("positions"), cache=cache,
+            embeds=batch.get("embeds"),
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = forward(
+            params, batch["tokens"], cfg,
+            positions=batch.get("positions"),
+            embeds=batch.get("embeds"),
+        )
+        return logits[:, -1]
+
+    return prefill_step
+
+
+# ------------------------- input specs (dry-run) --------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell."""
+    cfg = get_config(arch)
+    sh: ShapeSpec = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    out: dict = {}
+    if sh.kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["labels"] = _sds((B, S), jnp.int32)
+    elif sh.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode: one new token against an S-long cache
+        out["tokens"] = _sds((B, 1), jnp.int32)
+    if cfg.pos == "mrope":
+        ps = (B, S) if sh.kind != "decode" else (B, 1)
+        out["positions"] = _sds((3,) + ps, jnp.int32)
+    if cfg.frontend == "vision" and sh.kind != "decode":
+        n_patch = min(256, S // 2)
+        out["embeds"] = _sds((B, n_patch, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "audio":
+        t_audio = min(1500, S)
+        out["embeds"] = _sds((B, t_audio, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def cache_specs(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    return jax.eval_shape(
+        lambda: init_cache(cfg, sh.global_batch, sh.seq_len)
+    )
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,235 @@
+"""Block-level pipelined performance model.
+
+Per keyswitch block (a hoisted PKB or a standalone CMULT/CONJ):
+
+  t_xpu   — INTT/BConv/NTT (+ base-domain EWOs; on monolithic designs all
+            MemOps run here too, out of the scratchpad)
+  t_xmu   — IP MACs + ext-domain EWOs + automorphism on bank PEs
+  t_comm  — heterogeneous transfers over the xPU<->HBM interface (IRF)
+  t_evk   — off-chip evk fetch (EVF); distinct keys are cached in the
+            scratchpad when they fit (Min-KS reuse; HE2-LM's one-evk
+            buffer), so traffic is counted once per distinct key
+
+Pipeline combining (Fig. 11):
+  * monolithic EVF (SHARP): latency = max(compute, evk-stream) — memory
+    stall is whatever evk traffic compute fails to hide.
+  * naive heterogeneous (SHARP-xMU): serial xPU -> comm -> xMU (b).
+  * HE2 dual-level overlap: latency = max(engines incl. comm & evk) +
+    fill/drain across the 2*dnum pipelined groups (d); INTT-Resident
+    further overlaps the BConv->NTT and NTT paths (e).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.dfg.fusion import CostWeights, optimal_fusion
+from repro.dfg.hoist import OpVolumes, non_pkb_blocks, pkb_volumes
+from repro.dfg.mapping import map_program
+from repro.dfg.pkb import PKB, identify_pkbs
+from repro.sim.hw import HWConfig, WORD_BYTES
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    latency_s: float = 0.0
+    xpu_busy_s: float = 0.0
+    xmu_busy_s: float = 0.0
+    comm_busy_s: float = 0.0
+    comm_stall_s: float = 0.0
+    mem_stall_s: float = 0.0
+    energy_j: float = 0.0
+    volumes: OpVolumes = dataclasses.field(default_factory=OpVolumes)
+
+    @property
+    def edp(self) -> float:           # J*ms
+        return self.energy_j * self.latency_s * 1e3
+
+    def edap(self, area_mm2: float) -> float:
+        return self.edp * area_mm2
+
+    @property
+    def comm_stall_frac(self) -> float:
+        return self.comm_stall_s / self.latency_s if self.latency_s else 0.0
+
+    @property
+    def xpu_util(self) -> float:
+        return self.xpu_busy_s / self.latency_s if self.latency_s else 0.0
+
+    @property
+    def xmu_util(self) -> float:
+        return self.xmu_busy_s / self.latency_s if self.latency_s else 0.0
+
+
+def _block_engine_times(v: OpVolumes, hw: HWConfig, dnum: int,
+                        evk_words_due: float) -> dict:
+    ns = 1e-9
+    t_ntt = v.ntt_words / hw.ntt_tput * ns
+    t_bconv = v.bconv_macs / hw.bconv_tput * ns
+    if hw.intt_resident:
+        # BConv->NTT || NTT parallel paths: overlap NTT legs with BConv
+        t_xpu_core = max(t_ntt, t_bconv) + 0.15 * min(t_ntt, t_bconv)
+    elif hw.dual_overlap:
+        t_xpu_core = max(t_ntt, t_bconv) + 0.3 * min(t_ntt, t_bconv)
+    else:
+        t_xpu_core = t_ntt + t_bconv
+
+    if hw.memop_fusion:
+        # fused IP+PMul+Autom xMU pass: permutation folds into addressing
+        mem_words = v.ip_macs + v.ewo_ext_words + v.ewo_words
+    else:
+        mem_words = (v.ip_macs + v.ewo_ext_words + v.autom_words
+                     + v.ewo_words)
+    if hw.xmu_tput > 0:
+        t_xpu = t_xpu_core + v.xpu_ewo_words / hw.ewe_tput * ns
+        t_xmu = mem_words / hw.xmu_tput * ns
+    else:
+        # monolithic: MemOps on the xPU EWEU out of the scratchpad
+        t_xpu = t_xpu_core + (v.xpu_ewo_words + mem_words) \
+            / hw.ewe_tput * ns
+        t_xmu = 0.0
+
+    t_comm = v.comm_words * WORD_BYTES / (hw.hbm_bw_tbs * 1e12)
+    t_evk = evk_words_due * WORD_BYTES / (hw.hbm_bw_tbs * 1e12)
+    return {"xpu": t_xpu, "xmu": t_xmu, "comm": t_comm, "evk": t_evk,
+            "dnum": dnum}
+
+
+def _combine(times: dict, hw: HWConfig) -> tuple[float, float, float]:
+    """-> (latency, comm_stall, mem_stall) for one block."""
+    t_xpu, t_xmu, t_comm, t_evk = (times["xpu"], times["xmu"],
+                                   times["comm"], times["evk"])
+    if hw.xmu_tput == 0:
+        compute = t_xpu + t_xmu
+        lat = max(compute, t_evk)
+        return lat, 0.0, lat - compute
+    if hw.dual_overlap:
+        g = max(2 * times["dnum"], 2)
+        parts = [t_xpu, t_xmu, t_comm, t_evk]
+        bound = max(parts)
+        fill = (sum(parts) - bound) / g
+        lat = bound + fill
+        no_comm = max(t_xpu, t_xmu, t_evk)
+        no_comm += (t_xpu + t_xmu + t_evk - no_comm) / g
+        no_evk = max(t_xpu, t_xmu, t_comm)
+        no_evk += (t_xpu + t_xmu + t_comm - no_evk) / g
+        return lat, max(0.0, lat - no_comm), max(0.0, lat - no_evk)
+    # naive heterogeneous: serialized critical path (Fig. 11(b))
+    lat = t_xpu + t_comm + t_xmu + t_evk
+    return lat, t_comm, t_evk
+
+
+@dataclasses.dataclass
+class Block:
+    volumes: OpVolumes
+    dnum: int
+    evk_keys: tuple = ()        # (key-id, words) pairs this block touches
+    streams_evk: bool = False   # EVF: traffic due on first touch
+
+
+def block_time(v: OpVolumes, dnum: int, hw: HWConfig,
+               evk_words_due: float = 0.0) -> float:
+    return _combine(_block_engine_times(v, hw, dnum, evk_words_due), hw)[0]
+
+
+def simulate_blocks(blocks: list[Block], hw: HWConfig,
+                    name: str) -> SimResult:
+    res = SimResult(name=name)
+    cached: set = set()
+    cache_words = hw.onchip_mb * 1e6 / WORD_BYTES
+    for b in blocks:
+        due = 0.0
+        if b.streams_evk:
+            for key, words in b.evk_keys:
+                if key in cached and words <= cache_words:
+                    continue
+                due += words
+                if words <= cache_words:
+                    cached.add(key)
+        t = _block_engine_times(b.volumes, hw, b.dnum, due)
+        lat, cstall, mstall = _combine(t, hw)
+        res.latency_s += lat
+        res.xpu_busy_s += t["xpu"]
+        res.xmu_busy_s += t["xmu"]
+        res.comm_busy_s += t["comm"]
+        res.comm_stall_s += cstall
+        res.mem_stall_s += mstall
+        res.volumes = res.volumes + b.volumes
+    link_bytes = (res.volumes.comm_words + res.volumes.evk_load_words) \
+        * WORD_BYTES
+    # busy-time dynamic power + 10% static floor
+    res.energy_j = (
+        hw.power_xpu_w * (res.xpu_busy_s + 0.10 * res.latency_s)
+        + hw.power_xmu_w * (res.xmu_busy_s + 0.10 * res.latency_s)
+        + link_bytes * hw.link_pj_per_byte * 1e-12
+    )
+    return res
+
+
+def _evk_keys_for(pkb: PKB, strategy: str, k: int, alpha: int, nh: int):
+    """Distinct evk identities a block touches (for the EVF cache)."""
+    from repro.dfg.hoist import evk_words
+
+    l = pkb.limbs
+    w = evk_words(l, k, alpha, pkb.dfg.N)
+    if strategy == "minks":
+        bits = set()
+        for s in pkb.steps:
+            s = s % nh
+            bits |= {i for i in range(max(s.bit_length(), 1)) if s >> i & 1}
+        return tuple((("rot2", b, l), w) for b in (bits or {0}))
+    return tuple((("rot", s, l), w) for s in set(pkb.steps))
+
+
+def simulate_program(dfg, hw: HWConfig, strategy: str = "hoist",
+                     dataflow: str = "hybrid", fusion: bool = False,
+                     nh: int = 1 << 15, k: int = 12, alpha: int = 12,
+                     name: str | None = None) -> SimResult:
+    """strategy: 'minks' | 'plain' | 'hoist'; dataflow 'IRF'|'EVF'|'hybrid'.
+    fusion=True applies the HERO DP (scored with THIS hw's pipeline model)
+    before mapping."""
+    pkbs = identify_pkbs(dfg)
+    if fusion:
+        plan = optimal_fusion(
+            pkbs, k, alpha, nh, capacity_words=hw.evk_capacity_words(),
+            weights=_pipeline_weights(hw), dataflow="IRF",
+        )
+        pkbs = plan.fused
+    mode = dataflow
+    if dataflow == "hybrid" and hw.onchip_mb < 60:
+        mode = "IRF"      # SM cannot buffer an evk on-chip
+    mapped = map_program(pkbs, k, alpha, nh, mode=mode, strategy=strategy)
+    blocks = []
+    for m in mapped:
+        streams = m.dataflow == "EVF"
+        blocks.append(Block(
+            m.volumes, m.pkb.dnum,
+            _evk_keys_for(m.pkb, strategy, k, alpha, nh) if streams else (),
+            streams,
+        ))
+    extra, residual = non_pkb_blocks(
+        dfg, pkbs, k, alpha,
+        dataflow=("IRF" if mode == "IRF" else "EVF"),
+    )
+    for v in extra:
+        # relin/conj keys are shared program-wide; identity by size
+        key = (("relin", v.evk_set_words), v.evk_set_words)
+        blocks.append(Block(v, max(1, v.ip_count), (key,), mode != "IRF"))
+    blocks.append(Block(residual, 1))
+    return simulate_blocks(
+        blocks, hw,
+        name or f"{hw.name}/{strategy}/{dataflow}" + ("/fused" if fusion else ""),
+    )
+
+
+def _pipeline_weights(hw: HWConfig) -> CostWeights:
+    """CostWeights whose .seconds() delegates to the hw pipeline model —
+    so the fusion DP optimizes what the simulator measures."""
+
+    class _W(CostWeights):
+        def seconds(self, v: OpVolumes) -> float:  # type: ignore[override]
+            dnum = max(1, round(v.modup_count or 1))
+            return block_time(v, dnum, hw,
+                              v.evk_load_words and v.evk_set_words or 0.0)
+
+    return _W()

@@ -1,0 +1,32 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 per-tensor-scaled quantization: 4x less DP traffic at <0.5% relative
+error per tensor (error feedback omitted — gradients are noisy at this
+precision already; documented trade-off).  On a real mesh the compressed
+tensors are what crosses the pod-interconnect; here the quantize ->
+(all-reduce) -> dequantize pair is the unit-tested kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads_int8(grads):
+    def comp(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+
+    return jax.tree.map(comp, grads)
+
+
+def decompress_grads(comp):
+    def dec(c):
+        return c["q"].astype(jnp.float32) * c["scale"]
+
+    return jax.tree.map(
+        dec, comp,
+        is_leaf=lambda x: isinstance(x, dict) and "q" in x,
+    )

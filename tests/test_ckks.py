@@ -1,0 +1,120 @@
+"""End-to-end CKKS scheme correctness (encrypt -> op -> decrypt)."""
+import numpy as np
+import pytest
+
+
+def _rand_slots(rng, nh, scale=1.0):
+    return (rng.normal(size=nh) + 1j * rng.normal(size=nh)) * scale
+
+
+def test_encrypt_decrypt(ctx, rng):
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh)
+    assert np.abs(ctx.decrypt(ctx.encrypt(z)) - z).max() < 1e-5
+
+
+def test_add_sub(ctx, rng):
+    nh = ctx.params.num_slots
+    z1, z2 = _rand_slots(rng, nh), _rand_slots(rng, nh)
+    ct1, ct2 = ctx.encrypt(z1), ctx.encrypt(z2)
+    assert np.abs(ctx.decrypt(ctx.add(ct1, ct2)) - (z1 + z2)).max() < 1e-5
+    assert np.abs(ctx.decrypt(ctx.sub(ct1, ct2)) - (z1 - z2)).max() < 1e-5
+
+
+def test_plaintext_ops(ctx, rng):
+    nh = ctx.params.num_slots
+    z1, z2 = _rand_slots(rng, nh), _rand_slots(rng, nh)
+    ct = ctx.encrypt(z1)
+    pt = ctx.encode(z2)
+    assert np.abs(ctx.decrypt(ctx.pt_add(ct, pt)) - (z1 + z2)).max() < 1e-5
+    out = ctx.pt_mul(ct, pt)
+    assert out.level == ct.level - 1, "pt_mul rescales one level"
+    assert np.abs(ctx.decrypt(out) - z1 * z2).max() < 1e-3
+
+
+def test_ciphertext_multiply(ctx, rng):
+    nh = ctx.params.num_slots
+    z1, z2 = _rand_slots(rng, nh), _rand_slots(rng, nh)
+    out = ctx.multiply(ctx.encrypt(z1), ctx.encrypt(z2))
+    assert np.abs(ctx.decrypt(out) - z1 * z2).max() < 1e-3
+
+
+def test_multiply_depth(ctx, rng):
+    """((z^2)^2) across two levels."""
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh, 0.5)
+    ct = ctx.encrypt(z)
+    sq = ctx.multiply(ct, ct)
+    sq2 = ctx.multiply(sq, sq)
+    assert np.abs(ctx.decrypt(sq2) - z**4).max() < 5e-3
+
+
+@pytest.mark.parametrize("steps", [1, 2, 7, 100])
+def test_rotate(ctx, rng, steps):
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh)
+    out = ctx.rotate(ctx.encrypt(z), steps)
+    assert np.abs(ctx.decrypt(out) - np.roll(z, -steps)).max() < 1e-3
+
+
+def test_conjugate(ctx, rng):
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh)
+    out = ctx.conjugate(ctx.encrypt(z))
+    assert np.abs(ctx.decrypt(out) - np.conj(z)).max() < 1e-3
+
+
+def test_rotate_composition(ctx, rng):
+    """Rot(Rot(ct, a), b) == Rot(ct, a+b) — the PKB-fusion identity."""
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh)
+    ct = ctx.encrypt(z)
+    ab = ctx.rotate(ctx.rotate(ct, 3), 5)
+    direct = ctx.rotate(ct, 8)
+    assert np.abs(ctx.decrypt(ab) - ctx.decrypt(direct)).max() < 2e-3
+
+
+def test_rescale_bookkeeping(ctx, rng):
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh)
+    ct = ctx.encrypt(z)
+    out = ctx.multiply(ct, ct, rescale=False)
+    assert out.level == ct.level
+    r = ctx.rescale(out)
+    assert r.level == ct.level - 1
+    q_last = ctx.chain(ct.level)[-1]
+    assert abs(r.scale - out.scale / q_last) < 1e-6
+
+
+def test_hoisted_rotation_sum_matches_naive(ctx, rng):
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh)
+    ct = ctx.encrypt(z)
+    steps = [1, 5, 17]
+    ptvals = [rng.normal(size=nh) for _ in steps]
+    pts = [ctx.encode(v) for v in ptvals]
+    h = ctx.hoisted_rotation_sum(ct, steps, pts)
+    expected = sum(np.roll(z, -s) * v for s, v in zip(steps, ptvals))
+    assert np.abs(ctx.decrypt(h) - expected).max() < 2e-3
+
+
+def test_hoisted_rotation_sum_no_pt(ctx, rng):
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh)
+    ct = ctx.encrypt(z)
+    steps = [2, 9]
+    h = ctx.hoisted_rotation_sum(ct, steps, None)
+    expected = sum(np.roll(z, -s) for s in steps)
+    assert np.abs(ctx.decrypt(h) - expected).max() < 2e-3
+
+
+def test_keyswitch_at_lower_level(ctx, rng):
+    """Level-independent gadget: rotation still correct after rescale."""
+    nh = ctx.params.num_slots
+    z = _rand_slots(rng, nh)
+    ct = ctx.encrypt(z)
+    ones = ctx.encode(np.ones(nh))
+    low = ctx.pt_mul(ct, ones)  # burn a level
+    low = ctx.pt_mul(low, ctx.encode(np.ones(nh), level=low.level))
+    out = ctx.rotate(low, 4)
+    assert np.abs(ctx.decrypt(out) - np.roll(z, -4)).max() < 5e-3

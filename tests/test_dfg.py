@@ -1,0 +1,162 @@
+"""HERO DFG framework tests: PKB identification, hoisting counts,
+fusion DP (incl. homomorphic validation of the Eq. (4) rewrite)."""
+import numpy as np
+import pytest
+
+from repro.dfg.fusion import (
+    CostWeights, FusedPKB, fuse_functional, fuse_group, fuse_pair,
+    fuse_score, optimal_fusion,
+)
+from repro.dfg.graph import OpKind
+from repro.dfg.hoist import pkb_volumes, program_volumes
+from repro.dfg.pkb import identify_pkbs, keyswitch_layers
+from repro.dfg.programs import (
+    PROGRAMS, bootstrapping_dfg, convbn_example, helr_dfg,
+)
+from repro.dfg.trace import ProgramBuilder
+
+
+def test_layering_serial_vs_parallel():
+    b = ProgramBuilder(N=1 << 10, alpha=2)
+    x = b.input(6)
+    r1 = x.rot(1)            # layer 0
+    r2 = x.rot(2)            # layer 0 (parallel)
+    r3 = r1.cadd(r2).rot(4)  # layer 1 (serial)
+    r3.output()
+    layers = keyswitch_layers(b.g)
+    rots = [n for n in b.g.nodes.values() if n.op == OpKind.ROT]
+    assert sorted(layers[n.id] for n in rots) == [0, 0, 1]
+
+
+def test_pkb_identification_convbn():
+    pkbs = identify_pkbs(convbn_example().g)
+    assert [p.n_rot for p in pkbs] == [8, 7, 7]
+    assert all(p.indeg == 1 and p.outdeg == 1 for p in pkbs)
+
+
+def test_hoisting_reduces_modups():
+    pkbs = identify_pkbs(convbn_example().g)
+    p = pkbs[0]
+    plain = pkb_volumes(p, k=12, alpha=12, strategy="plain", dataflow="IRF")
+    hoist = pkb_volumes(p, k=12, alpha=12, strategy="hoist", dataflow="IRF")
+    assert plain.modup_count == p.n_rot
+    assert hoist.modup_count == p.indeg
+    assert hoist.comm_words < plain.comm_words
+    assert hoist.ip_count == plain.ip_count  # IPs unchanged by hoisting
+    # hoisting shifts EWOs to the extended domain (paper Sec. II-C)
+    assert hoist.ewo_ext_words > 0 and plain.ewo_ext_words == 0
+
+
+def test_minks_increases_keyswitches():
+    pkbs = identify_pkbs(convbn_example().g)
+    p = pkbs[0]
+    minks = pkb_volumes(p, 12, 12, "minks", "EVF")
+    plain = pkb_volumes(p, 12, 12, "plain", "EVF")
+    assert minks.keyswitch_count >= plain.keyswitch_count
+    assert minks.evk_set_words <= plain.evk_set_words
+
+
+def test_fuse_pair_step_sums():
+    pkbs = identify_pkbs(convbn_example().g)
+    fused = fuse_pair(pkbs[0], pkbs[1], nh=1 << 15)
+    s1, s2 = set(pkbs[0].steps), set(pkbs[1].steps)
+    assert set(fused.steps) == {(a + b) % (1 << 15) for a in s1 for b in s2}
+    assert fused.n_rot == len(set(fused.steps))  # merged duplicate paths
+
+
+def test_fusion_dp_convbn():
+    """Fig. 9: the three ConvBN PKBs fuse into one under ample capacity."""
+    pkbs = identify_pkbs(convbn_example().g)
+    plan = optimal_fusion(pkbs, k=12, alpha=12, nh=1 << 15,
+                          capacity_words=8e9 / 8)
+    assert plan.score > 0
+    assert plan.groups == [[0, 1, 2]]
+
+
+def test_fusion_respects_capacity():
+    """Tiny evk budget -> no fusion allowed."""
+    pkbs = identify_pkbs(convbn_example().g)
+    plan = optimal_fusion(pkbs, k=12, alpha=12, nh=1 << 15,
+                          capacity_words=1.0)
+    assert plan.groups == [[0], [1], [2]]
+    assert plan.score == 0.0
+
+
+def test_fusion_dp_beats_greedy_pairwise():
+    """DP must be at least as good as any fixed pairing."""
+    pkbs = identify_pkbs(convbn_example().g)
+    w = CostWeights()
+    cap = 8e9 / 8
+    dp = optimal_fusion(pkbs, 12, 12, 1 << 15, cap, w)
+    pair01 = fuse_score([pkbs[0], pkbs[1]], 12, 12, 1 << 15, w, cap)
+    pair12 = fuse_score([pkbs[1], pkbs[2]], 12, 12, 1 << 15, w, cap)
+    best_pair = max(s[0] for s in (pair01, pair12) if s is not None)
+    assert dp.score >= best_pair - 1e-12
+
+
+def test_program_volumes_hero_reduction():
+    """HERO (hoist, IRF) must cut comm massively vs per-rotation IRF."""
+    g = bootstrapping_dfg().g
+    pkbs = identify_pkbs(g)
+    plain = program_volumes(g, pkbs, 12, 12, "plain", "IRF")
+    hoist = program_volumes(g, pkbs, 12, 12, "hoist", "IRF")
+    assert hoist.comm_words < plain.comm_words / 3
+    assert hoist.modup_count < plain.modup_count / 5
+
+
+@pytest.mark.parametrize("name", list(PROGRAMS))
+def test_benchmark_programs_build(name):
+    g = PROGRAMS[name]().g
+    pkbs = identify_pkbs(g)
+    assert len(pkbs) > 0
+    assert g.topo_order()  # acyclic
+
+
+def test_helr_low_parallelism():
+    """Fig. 6: HELR is dominated by parallelism-1 PKBs."""
+    pkbs = identify_pkbs(helr_dfg(with_bootstrap=False).g)
+    ones = sum(1 for p in pkbs if p.n_rot == 1)
+    assert ones >= len(pkbs) * 0.8
+
+
+# ------------------ homomorphic validation of Eq. (4) --------------------
+
+def test_fusion_functional_equivalence(ctx, rng):
+    """Fused PKB evaluates to the same ciphertext as the serial pair."""
+    from repro.core import linear  # noqa: F401
+
+    nh = ctx.params.num_slots
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    ct = ctx.encrypt(z)
+
+    steps1, steps2 = [1, 2, 3], [4, 8]
+    pts1 = [rng.normal(size=nh) for _ in steps1]
+    pts2 = [rng.normal(size=nh) for _ in steps2]
+
+    # serial: PKB2( PKB1(x) )
+    inner = ctx.hoisted_rotation_sum(
+        ct, steps1, [ctx.encode(p) for p in pts1], rescale=False
+    )
+    serial = ctx.hoisted_rotation_sum(
+        inner, steps2, [ctx.encode(p, level=inner.level) for p in pts2],
+        rescale=False,
+    )
+
+    # fused: single PKB with summed steps and rotated plaintext products;
+    # plaintext product of two scale-D encodings == one scale-D^2 encoding
+    fsteps, fpts = fuse_functional(steps1, pts1, steps2, pts2, nh)
+    fused_pts = [
+        ctx.encode(p, level=ct.level, scale=ctx.params.scale ** 2)
+        for p in fpts
+    ]
+    fused = ctx.hoisted_rotation_sum(ct, fsteps, fused_pts, rescale=False)
+
+    expected = np.zeros(nh, dtype=complex)
+    acc1 = sum(np.roll(z, -s) * p for s, p in zip(steps1, pts1))
+    expected = sum(np.roll(acc1, -s) * p for s, p in zip(steps2, pts2))
+
+    d_serial = ctx.decrypt(serial)
+    d_fused = ctx.decrypt(fused)
+    assert np.abs(d_serial - expected).max() < 2e-2
+    assert np.abs(d_fused - expected).max() < 2e-2
+    assert np.abs(d_fused - d_serial).max() < 3e-2

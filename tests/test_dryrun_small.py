@@ -1,0 +1,99 @@
+"""Dry-run machinery test on a small 8-device mesh (subprocess — the
+device-count override must happen before jax initializes)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import reduced_config
+    from repro.launch import plan as plan_mod
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.mesh import make_small_mesh
+    from repro.models.model import init_cache, init_params
+    from repro.models.steps import make_serve_step, make_train_step
+    from repro.train.optimizer import AdamW
+
+    cfg = reduced_config("phi3_medium_14b")
+    mesh = make_small_mesh(8)
+    params_sds = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    opt = AdamW()
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    batch_sds = {
+        "tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+    }
+    p_plan = plan_mod.param_plan(cfg, mesh, params_sds)
+    o_plan = plan_mod.opt_plan(cfg, mesh, opt_sds, p_plan)
+    b_plan = plan_mod.batch_plan(mesh, batch_sds)
+    with mesh:
+        step = make_train_step(cfg, opt)
+        lowered = jax.jit(step, in_shardings=(p_plan, o_plan, b_plan),
+                          out_shardings=(p_plan, o_plan, None)).lower(
+            params_sds, opt_sds, batch_sds)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+
+        # decode path too
+        cache_sds = jax.eval_shape(lambda: init_cache(cfg, 8, 64))
+        c_plan = plan_mod.cache_plan(cfg, mesh, cache_sds)
+        serve = make_serve_step(cfg)
+        dec_batch = {"tokens": jax.ShapeDtypeStruct((8, 1), jnp.int32)}
+        db_plan = plan_mod.batch_plan(mesh, dec_batch)
+        lowered2 = jax.jit(serve, in_shardings=(p_plan, c_plan, db_plan),
+                           out_shardings=(None, c_plan)).lower(
+            params_sds, cache_sds, dec_batch)
+        compiled2 = lowered2.compile()
+
+    print(json.dumps({
+        "flops": cost.get("flops", 0),
+        "coll_total": coll["total_bytes"],
+        "ar_count": coll["counts"]["all-reduce"],
+        "decode_ok": True,
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_train_and_decode():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["flops"] > 0, "cost analysis must report flops"
+    assert res["ar_count"] > 0, "DP training must emit all-reduces"
+    assert res["decode_ok"]
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+      %all-reduce.1 = f32[1024,256]{1,0} all-reduce(%dot), replica_groups={}
+      %ag = bf16[32,128]{1,0} all-gather(%p0), dimensions={0}
+      %x = f32[8]{0} add(%a, %b)
+    """
+    c = collective_bytes(hlo)
+    assert c["bytes"]["all-reduce"] == 1024 * 256 * 4
+    assert c["bytes"]["all-gather"] == 32 * 128 * 2
+    assert c["counts"]["all-reduce"] == 1
+    assert c["total_bytes"] == 1024 * 256 * 4 + 32 * 128 * 2

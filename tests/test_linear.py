@@ -1,0 +1,49 @@
+"""Homomorphic linear transform (diagonal + BSGS) tests."""
+import numpy as np
+
+from repro.core import linear
+
+
+def _sparse_matrix(rng, nh, diag_steps):
+    A = np.zeros((nh, nh), dtype=complex)
+    for d in diag_steps:
+        v = rng.normal(size=nh)
+        for i in range(nh):
+            A[i, (i + d) % nh] = v[i]
+    return A
+
+
+def test_matvec_diag(ctx, rng):
+    nh = ctx.params.num_slots
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    A = _sparse_matrix(rng, nh, [0, 1, 3, 9])
+    ct = ctx.encrypt(z)
+    y = ctx.decrypt(linear.matvec_diag(ctx, ct, linear.matrix_diagonals(A)))
+    ref = A @ z
+    assert np.abs(y - ref).max() / np.abs(ref).max() < 1e-3
+
+
+def test_matvec_bsgs_matches_diag(ctx, rng):
+    nh = ctx.params.num_slots
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    A = _sparse_matrix(rng, nh, [0, 1, 2, 5, 8, 13, 21, 34])
+    diags = linear.matrix_diagonals(A)
+    ct = ctx.encrypt(z)
+    ref = A @ z
+    y1 = ctx.decrypt(linear.matvec_diag(ctx, ct, diags))
+    y2 = ctx.decrypt(linear.matvec_bsgs(ctx, ct, diags, bs=8))
+    assert np.abs(y1 - ref).max() / np.abs(ref).max() < 1e-3
+    assert np.abs(y2 - ref).max() / np.abs(ref).max() < 1e-3
+
+
+def test_bsgs_various_bs(ctx, rng):
+    """BSGS result is bs-invariant (paper Fig. 7 explores this trade-off)."""
+    nh = ctx.params.num_slots
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    A = _sparse_matrix(rng, nh, list(range(12)))
+    diags = linear.matrix_diagonals(A)
+    ref = A @ z
+    ct = ctx.encrypt(z)
+    for bs in (2, 4, 6):
+        y = ctx.decrypt(linear.matvec_bsgs(ctx, ct, diags, bs=bs))
+        assert np.abs(y - ref).max() / np.abs(ref).max() < 2e-3, f"bs={bs}"

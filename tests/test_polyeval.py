@@ -1,0 +1,38 @@
+"""Homomorphic polynomial evaluation tests."""
+import numpy as np
+import pytest
+
+from repro.core.ckks import CKKSContext
+from repro.core.params import CKKSParams
+from repro.core.polyeval import (
+    chebyshev_coeffs, eval_chebyshev, eval_poly_horner,
+)
+
+
+@pytest.fixture(scope="module")
+def deep_ctx():
+    p = CKKSParams(logN=9, L=12, alpha=3, k=4, q_bits=29, scale_bits=29)
+    return CKKSContext(p, seed=11)
+
+
+def test_chebyshev_sine(deep_ctx, rng):
+    ctx = deep_ctx
+    nh = ctx.params.num_slots
+    x = rng.uniform(-1, 1, nh)
+    K = 3.5
+    fn = lambda t: np.sin(2 * np.pi * K * t) / (2 * np.pi)  # noqa: E731
+    coeffs = chebyshev_coeffs(fn, 31)
+    out = eval_chebyshev(ctx, ctx.encrypt(x), coeffs)
+    assert np.abs(ctx.decrypt(out).real - fn(x)).max() < 5e-3
+    assert out.level >= 1
+
+
+def test_horner_sigmoid(deep_ctx, rng):
+    """HELR's degree-3 sigmoid approximation."""
+    ctx = deep_ctx
+    nh = ctx.params.num_slots
+    x = rng.uniform(-4, 4, nh) / 8.0
+    c3 = np.array([0.5, 1.20096, 0.0, -0.81562])  # sigmoid approx on [-8,8]/8
+    out = eval_poly_horner(ctx, ctx.encrypt(x), c3)
+    exp = c3[0] + c3[1] * x + c3[3] * x**3
+    assert np.abs(ctx.decrypt(out).real - exp).max() < 1e-3

@@ -1,0 +1,153 @@
+"""Unit + property tests for the RNS/NTT/BConv substrate."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import nt, poly
+from repro.core.params import CKKSParams
+from repro.core.rns import ntt_ref, intt_ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return CKKSParams(logN=8, L=3, alpha=2, k=2, q_bits=29)
+
+
+@pytest.fixture(scope="module")
+def pc(params):
+    return poly.PolyContext(params)
+
+
+def test_prime_properties(params):
+    two_n = 2 * params.N
+    for p in params.q_primes + params.p_primes:
+        assert nt.is_prime(p)
+        assert p % two_n == 1, "NTT-friendly primes must be 1 mod 2N"
+    assert len(set(params.q_primes + params.p_primes)) == params.L + 1 + params.k
+
+
+def test_digit_groups(params):
+    groups = params.digit_groups(params.L)
+    assert sum(len(g) for g in groups) == params.L + 1
+    assert len(groups) == params.dnum
+
+
+def test_ntt_ref_roundtrip(params, pc):
+    rng = np.random.default_rng(0)
+    t = pc.rns.tables[0]
+    a = rng.integers(0, t.p, params.N, dtype=np.uint64)
+    assert np.array_equal(intt_ref(ntt_ref(a, t), t), a)
+
+
+def test_ntt_negacyclic_convolution():
+    """NTT-domain product == schoolbook negacyclic convolution (exact)."""
+    p = CKKSParams(logN=6, L=1, alpha=1, k=1, q_bits=29)
+    pc = poly.PolyContext(p)
+    t = pc.rns.tables[0]
+    rng = np.random.default_rng(1)
+    N = p.N
+    a = rng.integers(0, t.p, N, dtype=np.uint64)
+    b = rng.integers(0, t.p, N, dtype=np.uint64)
+    prod = intt_ref((ntt_ref(a, t) * ntt_ref(b, t)) % np.uint64(t.p), t)
+    c = np.zeros(N, dtype=object)
+    for i in range(N):
+        for j in range(N):
+            k = i + j
+            if k < N:
+                c[k] = (c[k] + int(a[i]) * int(b[j])) % t.p
+            else:
+                c[k - N] = (c[k - N] - int(a[i]) * int(b[j])) % t.p
+    assert np.array_equal(prod, np.array([int(x) % t.p for x in c], dtype=np.uint64))
+
+
+def test_jnp_ntt_matches_ref(params, pc):
+    rng = np.random.default_rng(2)
+    primes = params.q_chain(params.L)
+    x = np.stack([rng.integers(0, q, params.N, dtype=np.uint64) for q in primes])
+    fx = np.asarray(poly.ntt(jnp.asarray(x), primes, pc))
+    for i, q in enumerate(primes):
+        t = pc.rns.tables[pc.rns.prime_index[q]]
+        assert np.array_equal(fx[i], ntt_ref(x[i], t)), f"limb {i}"
+    ix = np.asarray(poly.intt(jnp.asarray(fx), primes, pc))
+    assert np.array_equal(ix, x)
+
+
+def test_bconv_crt_consistency(params, pc):
+    """FBC result == exact value + k*prod(src) for a consistent small k."""
+    rng = np.random.default_rng(3)
+    src, dst = params.q_chain(1), params.p_primes
+    Q = 1
+    for s in src:
+        Q *= s
+    xs = np.stack([rng.integers(0, q, params.N, dtype=np.uint64) for q in src])
+    ys = np.asarray(poly.bconv(jnp.asarray(xs), tuple(src), tuple(dst), pc))
+    for c in range(0, params.N, 37):  # spot-check coefficients
+        X = 0
+        for i, q in enumerate(src):
+            qhat = Q // q
+            X = (X + int(xs[i, c]) * nt.modinv(qhat, q) * qhat) % Q
+        assert any(
+            all(int(ys[j, c]) == (X + k * Q) % d for j, d in enumerate(dst))
+            for k in range(len(src) + 1)
+        ), f"coefficient {c}: no consistent FBC multiple"
+
+
+def test_automorphism_roundtrip(params, pc):
+    rng = np.random.default_rng(4)
+    primes = params.q_chain(params.L)
+    x = np.stack([rng.integers(0, q, params.N, dtype=np.uint64) for q in primes])
+    g = pc.rns.galois_for_rotation(3)
+    ginv = pow(g, -1, 2 * params.N)
+    y = poly.automorphism(jnp.asarray(x), primes, g, pc, eval_domain=False)
+    z = poly.automorphism(y, primes, ginv, pc, eval_domain=False)
+    assert np.array_equal(np.asarray(z), x)
+
+
+def test_automorphism_composition(params, pc):
+    """sigma_a(sigma_b(x)) == sigma_{a*b}(x)."""
+    rng = np.random.default_rng(5)
+    primes = params.q_chain(1)
+    x = jnp.asarray(
+        np.stack([rng.integers(0, q, params.N, dtype=np.uint64) for q in primes])
+    )
+    two_n = 2 * params.N
+    ga = pc.rns.galois_for_rotation(3)
+    gb = pc.rns.galois_for_rotation(7)
+    y1 = poly.automorphism(
+        poly.automorphism(x, primes, ga, pc, eval_domain=False),
+        primes, gb, pc, eval_domain=False,
+    )
+    y2 = poly.automorphism(x, primes, (ga * gb) % two_n, pc, eval_domain=False)
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+
+
+# ---------------------------- property tests ----------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_prop_ntt_linear(seed):
+    """NTT(a + b) == NTT(a) + NTT(b) (mod p)."""
+    p = CKKSParams(logN=6, L=1, alpha=1, k=1, q_bits=29)
+    pc = poly.PolyContext(p)
+    t = pc.rns.tables[0]
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, t.p, p.N, dtype=np.uint64)
+    b = rng.integers(0, t.p, p.N, dtype=np.uint64)
+    lhs = ntt_ref((a + b) % np.uint64(t.p), t)
+    rhs = (ntt_ref(a, t) + ntt_ref(b, t)) % np.uint64(t.p)
+    assert np.array_equal(lhs, rhs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(r1=st.integers(0, 31), r2=st.integers(0, 31))
+def test_prop_galois_additive(r1, r2):
+    """Rotation additivity: galois(r1)*galois(r2) == galois(r1+r2) mod 2N.
+
+    This is the algebraic fact behind PKB fusion (Eq. (4))."""
+    p = CKKSParams(logN=6, L=1, alpha=1, k=1, q_bits=29)
+    pc = poly.PolyContext(p)
+    two_n = 2 * p.N
+    g = (pc.rns.galois_for_rotation(r1) * pc.rns.galois_for_rotation(r2)) % two_n
+    assert g == pc.rns.galois_for_rotation((r1 + r2) % p.num_slots)

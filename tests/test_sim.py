@@ -1,0 +1,92 @@
+"""Simulator behaviour tests: paper-claim reproduction + monotonicity
+properties (more bandwidth never slower, etc.)."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dfg.programs import bootstrapping_dfg, helr_dfg
+from repro.sim import HE2_LM, HE2_SM, SHARP, SHARP_XMU
+from repro.sim.engine import simulate_program
+from repro.sim.hw import with_bandwidth
+
+
+@pytest.fixture(scope="module")
+def boot_bsgs():
+    return bootstrapping_dfg(bsgs_bs=4).g
+
+
+@pytest.fixture(scope="module")
+def boot_full():
+    return bootstrapping_dfg(bsgs_bs=0).g
+
+
+def test_sharp_bootstrap_calibration(boot_bsgs):
+    """Simulated SHARP bootstrapping within 15% of the paper's 3.12 ms."""
+    r = simulate_program(boot_bsgs, SHARP, "minks", "EVF")
+    assert abs(r.latency_s * 1e3 - 3.12) / 3.12 < 0.15
+
+
+def test_he2_speedup_over_sharp(boot_bsgs, boot_full):
+    """HE2-LM speedup vs SHARP near the paper's 1.66x for bootstrapping."""
+    sharp = simulate_program(boot_bsgs, SHARP, "minks", "EVF")
+    he2 = simulate_program(boot_full, HE2_LM, "hoist", "hybrid", fusion=True)
+    speedup = sharp.latency_s / he2.latency_s
+    assert 1.3 < speedup < 2.3, f"speedup {speedup:.2f} vs paper 1.66"
+
+
+def test_hoisting_degrades_evf(boot_bsgs):
+    """Fig. 5/14: hoisting on EVF increases memory stalls vs Min-KS."""
+    minks = simulate_program(boot_bsgs, SHARP, "minks", "EVF")
+    hoist = simulate_program(boot_bsgs, SHARP, "hoist", "EVF")
+    assert hoist.mem_stall_s > minks.mem_stall_s
+    assert hoist.latency_s > minks.latency_s
+
+
+def test_naive_hetero_comm_dominates(boot_bsgs):
+    """Fig. 4: SHARP-xMU exposes large comm stalls on the critical path."""
+    r = simulate_program(boot_bsgs, SHARP_XMU, "hoist", "IRF")
+    assert r.comm_stall_frac > 0.4
+
+
+def test_he2_hides_communication(boot_full):
+    """Paper: communication stalls reduced to ~6.7% on HE2-LM."""
+    r = simulate_program(boot_full, HE2_LM, "hoist", "hybrid", fusion=True)
+    assert r.comm_stall_frac < 0.12
+
+
+def test_dual_overlap_beats_naive(boot_bsgs):
+    naive = simulate_program(boot_bsgs, SHARP_XMU, "hoist", "IRF")
+    he2 = simulate_program(boot_bsgs, HE2_SM, "hoist", "IRF")
+    assert he2.latency_s < naive.latency_s
+
+
+def test_hybrid_no_worse_than_irf():
+    g = helr_dfg(bsgs_bs=4).g
+    irf = simulate_program(g, HE2_LM, "hoist", "IRF", fusion=True)
+    hyb = simulate_program(g, HE2_LM, "hoist", "hybrid", fusion=True)
+    assert hyb.latency_s <= irf.latency_s * 1.02
+
+
+def test_edap_improvement(boot_bsgs, boot_full):
+    sharp = simulate_program(boot_bsgs, SHARP, "minks", "EVF")
+    he2 = simulate_program(boot_full, HE2_LM, "hoist", "hybrid", fusion=True)
+    edap_gain = sharp.edap(SHARP.area_mm2) / he2.edap(HE2_LM.area_mm2)
+    assert edap_gain > 3.0, f"EDAP gain {edap_gain:.1f} (paper: 9.23x)"
+
+
+@settings(max_examples=6, deadline=None)
+@given(bw=st.sampled_from([0.25, 0.5, 1.0, 2.0, 4.0]))
+def test_prop_bandwidth_monotonic(bw):
+    """More link bandwidth never slows HE2 down (Fig. 17(a))."""
+    g = bootstrapping_dfg(bsgs_bs=0).g
+    lo = simulate_program(g, with_bandwidth(HE2_SM, bw), "hoist", "IRF")
+    hi = simulate_program(g, with_bandwidth(HE2_SM, bw * 2), "hoist", "IRF")
+    assert hi.latency_s <= lo.latency_s * (1 + 1e-9)
+
+
+def test_energy_positive_and_consistent(boot_bsgs):
+    r = simulate_program(boot_bsgs, HE2_SM, "hoist", "IRF")
+    assert r.energy_j > 0
+    assert r.edp == pytest.approx(r.energy_j * r.latency_s * 1e3)
+    assert 0 <= r.xpu_util <= 1 and 0 <= r.xmu_util <= 1

@@ -1,0 +1,146 @@
+"""Training substrate tests: optimizer, checkpoint/resume, compression,
+data pipeline determinism, end-to-end loss decrease (deliverable (b))."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models.model import init_params
+from repro.models.steps import loss_fn
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import compress_grads_int8, decompress_grads
+from repro.train.optimizer import AdamW
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_adamw_decreases_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_adamw_bf16_states():
+    opt = AdamW(state_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    params2, state2 = opt.update(params, {"w": jnp.ones((4, 4))}, state)
+    assert state2["m"]["w"].dtype == jnp.bfloat16
+    assert params2["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    state = {"params": {"a": jnp.arange(6).reshape(2, 3),
+                        "blocks": [{"w": jnp.ones((2, 2))},
+                                   {"w": jnp.zeros((2, 2))}]},
+             "opt": {"step": jnp.array(7)}}
+    mgr.save(7, state)
+    step, restored = mgr.restore()
+    assert step == 7
+    np.testing.assert_array_equal(restored["params"]["a"],
+                                  np.arange(6).reshape(2, 3))
+    np.testing.assert_array_equal(restored["params"]["blocks"][1]["w"],
+                                  np.zeros((2, 2)))
+
+
+def test_checkpoint_incomplete_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(5, {"x": jnp.ones(3)})
+    # simulate a crashed write: directory without MANIFEST
+    bad = tmp_path / "step_9"
+    bad.mkdir()
+    (bad / "shard_0.npz").write_bytes(b"garbage")
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.ones(2)})
+    assert mgr.steps() == [3, 4]
+
+
+def test_grad_compression_error_bounded():
+    rng = np.random.default_rng(0)
+    grads = {"a": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(17,)).astype(np.float32))}
+    deq = decompress_grads(compress_grads_int8(grads))
+    for k in grads:
+        err = np.abs(np.asarray(deq[k]) - np.asarray(grads[k])).max()
+        scale = np.abs(np.asarray(grads[k])).max()
+        assert err <= scale / 127.0 + 1e-6
+
+
+def test_pipeline_deterministic_and_restartable():
+    cfg = PipelineConfig(vocab=64, seq_len=8, global_batch=4, seed=3)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    b1, b2 = p1.batch_at(11), p2.batch_at(11)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 8)
+    # labels are next-token shifted
+    full = p1._synthetic(11)
+    np.testing.assert_array_equal(b1["labels"], full[:, 1:])
+
+
+@pytest.mark.slow
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    """End-to-end: train a tiny LM, interrupt, resume, loss decreases."""
+    cfg = reduced_config("stablelm_3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(PipelineConfig(
+        vocab=cfg.vocab, seq_len=16, global_batch=8, seed=0))
+    tcfg = TrainerConfig(total_steps=30, ckpt_every=10,
+                         ckpt_dir=str(tmp_path), log_every=100)
+    tr = Trainer(cfg, tcfg, AdamW(lr=2e-3, warmup_steps=5))
+    params_out, _, losses = tr.run(params, pipe, resume=False)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, \
+        f"loss did not decrease: {losses[:3]} -> {losses[-3:]}"
+
+    # resume continues from the checkpoint, not from scratch
+    tcfg2 = TrainerConfig(total_steps=35, ckpt_every=10,
+                          ckpt_dir=str(tmp_path), log_every=100)
+    tr2 = Trainer(cfg, tcfg2, AdamW(lr=2e-3, warmup_steps=5))
+    fresh = init_params(cfg, jax.random.PRNGKey(0))
+    _, _, losses2 = tr2.run(fresh, pipe, resume=True)
+    assert len(losses2) <= 6, "resume should only run the remaining steps"
+
+
+def test_microbatch_accumulation_equivalent():
+    """grad(batch) == mean of grad(microbatches) for the same tokens."""
+    cfg = reduced_config("qwen2_vl_2b")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks),
+             "positions": jnp.broadcast_to(
+                 jnp.arange(8)[None, None], (3, 4, 8)).astype(jnp.int32)}
+    g_full = jax.grad(loss_fn)(params, batch, cfg)
+    halves = [
+        jax.grad(loss_fn)(
+            params,
+            {k: v[:, :2] if k == "positions" else v[:2]
+             for k, v in batch.items()},
+            cfg),
+        jax.grad(loss_fn)(
+            params,
+            {k: v[:, 2:] if k == "positions" else v[2:]
+             for k, v in batch.items()},
+            cfg),
+    ]
+    g_acc = jax.tree.map(lambda a, b: (a + b) / 2, *halves)
+    flat_f = jax.tree.leaves(g_full)
+    flat_a = jax.tree.leaves(g_acc)
+    for f, a in zip(flat_f, flat_a):
+        np.testing.assert_allclose(np.asarray(f, np.float32),
+                                   np.asarray(a, np.float32),
+                                   rtol=0.15, atol=2e-2)
