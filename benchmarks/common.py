@@ -20,6 +20,16 @@ from repro.sim.engine import SimResult, simulate_program
 
 BS_BASE = 4   # SHARP's baseline baby-step (Fig. 7(a))
 
+# --smoke (CI fast path): restrict each benchmark module to its
+# cheapest workload so `python -m benchmarks.run <fig> --smoke`
+# finishes in seconds (table1 is analytic and already instant).
+# Toggled by benchmarks.run.
+SMOKE = False
+
+
+def smoke_subset(benches: list[str]) -> list[str]:
+    return benches[:1] if SMOKE else benches
+
 
 def programs_for(bench: str, bsgs: bool):
     bs = BS_BASE if bsgs else 0

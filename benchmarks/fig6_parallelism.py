@@ -5,7 +5,7 @@ import collections
 import json
 import pathlib
 
-from benchmarks.common import programs_for
+from benchmarks.common import programs_for, smoke_subset
 from repro.dfg.fusion import optimal_fusion
 from repro.dfg.pkb import identify_pkbs
 from repro.sim import HE2_SM
@@ -31,7 +31,7 @@ def _bucket(ns):
 def run() -> list[str]:
     RESULTS.mkdir(exist_ok=True)
     lines, summary = [], {}
-    for bench in ["bootstrapping", "helr", "resnet20"]:
+    for bench in smoke_subset(["bootstrapping", "helr", "resnet20"]):
         g_bsgs = programs_for(bench, bsgs=True)   # Min-KS/BSGS baseline
         g_full = programs_for(bench, bsgs=False)
         pk_b = identify_pkbs(g_bsgs)

@@ -5,7 +5,7 @@ from __future__ import annotations
 import json
 import pathlib
 
-from repro.dfg.pkb import identify_pkbs
+from benchmarks import common
 from repro.dfg.programs import bootstrapping_dfg
 from repro.sim import HE2_SM, SHARP
 from repro.sim.engine import simulate_program
@@ -16,7 +16,7 @@ RESULTS = pathlib.Path(__file__).parent / "results"
 def run() -> list[str]:
     RESULTS.mkdir(exist_ok=True)
     lines, summary = [], {"EVF_SHARP": {}, "IRF_HE2": {}}
-    for bs in (0, 2, 4, 8, 16):
+    for bs in (0, 4) if common.SMOKE else (0, 2, 4, 8, 16):
         g = bootstrapping_dfg(bsgs_bs=bs).g
         r_evf = simulate_program(g, SHARP, "minks", "EVF")
         r_irf = simulate_program(g, HE2_SM, "hoist", "IRF", fusion=True)

@@ -3,7 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV lines and writes JSON results to
 benchmarks/results/ (consumed by EXPERIMENTS.md).
 
-Usage: PYTHONPATH=src python -m benchmarks.run [table4|fig14|...|all]
+Usage: python -m benchmarks.run [table4|fig14|...|all] [--smoke]
+
+--smoke restricts every module to its cheapest workload (CI fast path).
 """
 from __future__ import annotations
 
@@ -13,7 +15,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        fig6_parallelism, fig7_bsgs, fig14_ablation, fig15_hero,
+        common, fig6_parallelism, fig7_bsgs, fig14_ablation, fig15_hero,
         fig16_util, fig17_sensitivity, table1_ai, table4_end2end,
     )
 
@@ -27,7 +29,9 @@ def main() -> None:
         "fig16": fig16_util,
         "fig17": fig17_sensitivity,
     }
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    args = [a for a in sys.argv[1:] if a != "--smoke"]
+    common.SMOKE = "--smoke" in sys.argv[1:]
+    which = args[0] if args else "all"
     selected = modules if which == "all" else {which: modules[which]}
     print("name,us_per_call,derived")
     for name, mod in selected.items():

@@ -6,7 +6,7 @@ import pathlib
 import time
 
 from benchmarks.common import (
-    BENCHES, PAPER_LATENCY_MS, area_of, run_stack,
+    BENCHES, PAPER_LATENCY_MS, area_of, run_stack, smoke_subset,
 )
 
 RESULTS = pathlib.Path(__file__).parent / "results"
@@ -16,7 +16,7 @@ def run() -> list[str]:
     RESULTS.mkdir(exist_ok=True)
     lines = []
     summary = {}
-    for bench in BENCHES:
+    for bench in smoke_subset(BENCHES):
         t0 = time.time()
         rows = run_stack(bench)
         dt = (time.time() - t0) * 1e6 / max(len(rows), 1)

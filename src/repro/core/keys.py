@@ -108,7 +108,6 @@ class KeyChain:
             a_eval = poly.ntt(jnp.asarray(a_rns), primes, pc)
             e_rns = to_rns(sample_gaussian(self.rng, p.N), primes)
             e_eval = poly.ntt(jnp.asarray(e_rns), primes, pc)
-            g = jnp.asarray(self._gadgets[j])[:, None]
             b = poly.sub(
                 poly.add(
                     poly.mul_scalar(

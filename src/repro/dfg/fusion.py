@@ -16,7 +16,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.dfg.hoist import OpVolumes, evk_words, pkb_volumes
+from repro.dfg.hoist import OpVolumes, pkb_volumes
 from repro.dfg.pkb import PKB
 
 
@@ -43,6 +43,15 @@ class CostWeights:
                 + v.autom_words * self.autom
                 + v.comm_words * self.comm
                 + v.evk_load_words * self.evk_load)
+
+    def block_seconds(self, v: OpVolumes) -> float:
+        """Latency of one keyswitch block under these weights.
+
+        The default is the linear volume model; hardware-aware weights
+        (sim.engine._pipeline_weights) override this with the scheduled
+        group-pipeline makespan so the fusion DP optimizes exactly what
+        the simulator measures."""
+        return self.seconds(v)
 
 
 class FusedPKB(PKB):
@@ -132,10 +141,11 @@ def fuse_score(group: list[PKB], k: int, alpha: int, nh: int,
     v_f = pkb_volumes(fused, k, alpha, "hoist", dataflow, nh)
     if v_f.evk_set_words > capacity_words:
         return None
-    base = OpVolumes()
+    saved = -weights.block_seconds(v_f)
     for p in group:
-        base = base + pkb_volumes(p, k, alpha, "hoist", dataflow, nh)
-    return weights.seconds(base) - weights.seconds(v_f), fused
+        saved += weights.block_seconds(
+            pkb_volumes(p, k, alpha, "hoist", dataflow, nh))
+    return saved, fused
 
 
 def optimal_fusion(pkbs: list[PKB], k: int, alpha: int, nh: int,

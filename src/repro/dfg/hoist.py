@@ -29,6 +29,13 @@ class OpVolumes:
 
     ntt_words: float = 0.0      # NTT + INTT butterfly passes
     bconv_macs: float = 0.0     # BConv multiply-accumulates
+    # phase attribution of the xPU work (ModUp legs run before the
+    # up-link transfer; ModDown legs after the down-link) — the group
+    # scheduler needs the split, the analytic model only the totals
+    modup_ntt_words: float = 0.0
+    modup_bconv_macs: float = 0.0
+    moddown_ntt_words: float = 0.0
+    moddown_bconv_macs: float = 0.0
     ip_macs: float = 0.0        # IP multiply-accumulates (xMU)
     ewo_words: float = 0.0      # program EWOs (xMU under IRF, else xPU)
     xpu_ewo_words: float = 0.0  # ModDown-internal sub/scale (always xPU)
@@ -81,6 +88,8 @@ def modup_volumes(l: int, k: int, alpha: int, N: int) -> OpVolumes:
         min(alpha, l - g * alpha) * (ext - min(alpha, l - g * alpha)) * N
         for g in range(dnum)
     )
+    v.modup_ntt_words = v.ntt_words
+    v.modup_bconv_macs = v.bconv_macs
     v.modup_count = 1
     return v
 
@@ -92,6 +101,8 @@ def moddown_volumes(l: int, k: int, alpha: int, N: int,
     v.ntt_words = components * (k * N + l * N)   # INTT(P part) + NTT back
     v.bconv_macs = components * k * l * N
     v.xpu_ewo_words = components * 2 * l * N     # subtract + scale
+    v.moddown_ntt_words = v.ntt_words
+    v.moddown_bconv_macs = v.bconv_macs
     v.moddown_count = components // 2 if components >= 2 else 1
     return v
 

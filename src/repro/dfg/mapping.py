@@ -21,7 +21,8 @@ class MappedBlock:
     pkb: PKB
     strategy: str       # 'minks' | 'plain' | 'hoist'
     dataflow: str       # 'IRF' | 'EVF'
-    volumes: OpVolumes
+    volumes: OpVolumes  # carries the ModUp/ModDown phase split the
+    #                     group scheduler stripes across pipeline_groups
 
 
 def map_program(pkbs: list[PKB], k: int, alpha: int, nh: int,
@@ -39,8 +40,8 @@ def map_program(pkbs: list[PKB], k: int, alpha: int, nh: int,
             else:
                 v_irf = pkb_volumes(p, k, alpha, strategy, "IRF", nh)
                 v_evf = pkb_volumes(p, k, alpha, strategy, "EVF", nh)
-                df = ("IRF" if weights.seconds(v_irf) <= weights.seconds(v_evf)
-                      else "EVF")
+                df = ("IRF" if weights.block_seconds(v_irf)
+                      <= weights.block_seconds(v_evf) else "EVF")
         out.append(
             MappedBlock(p, strategy, df,
                         pkb_volumes(p, k, alpha, strategy, df, nh))

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 
-from repro.dfg.graph import COMMUTATIVE_OPS, DFG, KEYSWITCH_OPS, Node, OpKind
+from repro.dfg.graph import COMMUTATIVE_OPS, DFG, KEYSWITCH_OPS, OpKind
 
 # rescale is not modulus-commutative, but for PKB connectivity it is a
 # pass-through EWO (it neither needs a ModUp nor blocks fusion adjacency)

@@ -20,7 +20,6 @@ generators are calibrated so the SIMULATED ratios reproduce Table IV
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.dfg.trace import Handle, ProgramBuilder
 

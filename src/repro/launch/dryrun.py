@@ -215,6 +215,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         "memory_analysis": mem_info,
         "collectives": coll,
         "param_bytes_per_device": param_bytes_dev,
+        "state_bytes_per_device": state_bytes_dev,
         "n_params": n_par, "n_active_params": n_act,
         "model_flops": model_flops,
         "tokens": tokens,

@@ -4,7 +4,6 @@ divide a dimension are dropped rather than failing at lower time)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig

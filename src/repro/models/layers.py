@@ -6,8 +6,6 @@ explicit arrays so decode steps lower cleanly on the production mesh.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,9 +1,12 @@
 """Heterogeneous CKKS accelerator performance model (paper Secs. V-VII).
 
-Block-level pipelined simulator over HERO-mapped DFGs.  Reproduces the
-paper's evaluation: Table IV end-to-end latency/EDP/EDAP, Fig. 14
-ablation, Fig. 15 HERO reductions, Fig. 16 utilization, Fig. 17
-bandwidth/capacity sensitivity.
+Event-driven group-level pipeline simulator over HERO-mapped DFGs
+(sim.schedule), with the closed-form analytic combiner retained as
+mode="analytic" for regression comparison.  Reproduces the paper's
+evaluation: Table IV end-to-end latency/EDP/EDAP, Fig. 14 ablation,
+Fig. 15 HERO reductions, Fig. 16 utilization, Fig. 17 bandwidth/
+capacity sensitivity.
 """
 from repro.sim.hw import HWConfig, SHARP, SHARP_XMU, HE2_SM, HE2_LM  # noqa: F401
 from repro.sim.engine import simulate_program, SimResult  # noqa: F401
+from repro.sim.schedule import ENGINES, Schedule, Task, run_schedule  # noqa: F401

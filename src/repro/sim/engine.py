@@ -10,23 +10,30 @@ Per keyswitch block (a hoisted PKB or a standalone CMULT/CONJ):
             scratchpad when they fit (Min-KS reuse; HE2-LM's one-evk
             buffer), so traffic is counted once per distinct key
 
-Pipeline combining (Fig. 11):
-  * monolithic EVF (SHARP): latency = max(compute, evk-stream) — memory
-    stall is whatever evk traffic compute fails to hide.
-  * naive heterogeneous (SHARP-xMU): serial xPU -> comm -> xMU (b).
-  * HE2 dual-level overlap: latency = max(engines incl. comm & evk) +
-    fill/drain across the 2*dnum pipelined groups (d); INTT-Resident
-    further overlaps the BConv->NTT and NTT paths (e).
+Two latency models share the per-block engine times:
+
+  * mode="pipelined" (default) — the event-driven group scheduler
+    (sim.schedule): blocks expand into 2*dnum group task chains placed
+    on explicit engine timelines, with cross-block streaming overlap on
+    dual-overlap designs and exact fill/drain.  Stalls are measured
+    from timeline gaps and per-engine occupancy traces are attached to
+    the result.
+  * mode="analytic" — the closed-form combiner (Fig. 11): per block
+    max(engines) + fill/(2*dnum), blocks summed serially.  Kept for
+    regression comparison against the scheduler.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.dfg.fusion import CostWeights, optimal_fusion
-from repro.dfg.hoist import OpVolumes, non_pkb_blocks, pkb_volumes
+from repro.dfg.hoist import OpVolumes, non_pkb_blocks
 from repro.dfg.mapping import map_program
 from repro.dfg.pkb import PKB, identify_pkbs
 from repro.sim.hw import HWConfig, WORD_BYTES
+from repro.sim.schedule import (
+    ENGINES, pipeline_groups, schedule_blocks, scheduled_block_time,
+)
 
 
 @dataclasses.dataclass
@@ -40,6 +47,11 @@ class SimResult:
     mem_stall_s: float = 0.0
     energy_j: float = 0.0
     volumes: OpVolumes = dataclasses.field(default_factory=OpVolumes)
+    mode: str = "analytic"
+    # mode="pipelined" extras: per-engine occupancy traces
+    # {engine: [(start_s, end_s, label), ...]} and busy seconds
+    timelines: dict = dataclasses.field(default_factory=dict, repr=False)
+    engine_busy_s: dict = dataclasses.field(default_factory=dict)
 
     @property
     def edp(self) -> float:           # J*ms
@@ -59,6 +71,11 @@ class SimResult:
     @property
     def xmu_util(self) -> float:
         return self.xmu_busy_s / self.latency_s if self.latency_s else 0.0
+
+    def engine_util(self, engine: str) -> float:
+        if not self.latency_s:
+            return 0.0
+        return self.engine_busy_s.get(engine, 0.0) / self.latency_s
 
 
 def _block_engine_times(v: OpVolumes, hw: HWConfig, dnum: int,
@@ -96,7 +113,7 @@ def _block_engine_times(v: OpVolumes, hw: HWConfig, dnum: int,
 
 
 def _combine(times: dict, hw: HWConfig) -> tuple[float, float, float]:
-    """-> (latency, comm_stall, mem_stall) for one block."""
+    """-> (latency, comm_stall, mem_stall) for one block (analytic)."""
     t_xpu, t_xmu, t_comm, t_evk = (times["xpu"], times["xmu"],
                                    times["comm"], times["evk"])
     if hw.xmu_tput == 0:
@@ -104,7 +121,7 @@ def _combine(times: dict, hw: HWConfig) -> tuple[float, float, float]:
         lat = max(compute, t_evk)
         return lat, 0.0, lat - compute
     if hw.dual_overlap:
-        g = max(2 * times["dnum"], 2)
+        g = pipeline_groups(times["dnum"])
         parts = [t_xpu, t_xmu, t_comm, t_evk]
         bound = max(parts)
         fill = (sum(parts) - bound) / g
@@ -128,33 +145,55 @@ class Block:
 
 
 def block_time(v: OpVolumes, dnum: int, hw: HWConfig,
-               evk_words_due: float = 0.0) -> float:
-    return _combine(_block_engine_times(v, hw, dnum, evk_words_due), hw)[0]
+               evk_words_due: float = 0.0,
+               mode: str = "analytic") -> float:
+    times = _block_engine_times(v, hw, dnum, evk_words_due)
+    if mode == "pipelined":
+        return scheduled_block_time(times, v, hw)
+    return _combine(times, hw)[0]
 
 
-def simulate_blocks(blocks: list[Block], hw: HWConfig,
-                    name: str) -> SimResult:
-    res = SimResult(name=name)
+def _evk_due(b: Block, cached: set, cache_words: float) -> float:
+    due = 0.0
+    if b.streams_evk:
+        for key, words in b.evk_keys:
+            if key in cached and words <= cache_words:
+                continue
+            due += words
+            if words <= cache_words:
+                cached.add(key)
+    return due
+
+
+def simulate_blocks(blocks: list[Block], hw: HWConfig, name: str,
+                    mode: str = "pipelined") -> SimResult:
+    if mode not in ("pipelined", "analytic"):
+        raise ValueError(f"mode must be 'pipelined' or 'analytic', got "
+                         f"{mode!r}")
+    res = SimResult(name=name, mode=mode)
     cached: set = set()
     cache_words = hw.onchip_mb * 1e6 / WORD_BYTES
+    block_times = []
     for b in blocks:
-        due = 0.0
-        if b.streams_evk:
-            for key, words in b.evk_keys:
-                if key in cached and words <= cache_words:
-                    continue
-                due += words
-                if words <= cache_words:
-                    cached.add(key)
+        due = _evk_due(b, cached, cache_words)
         t = _block_engine_times(b.volumes, hw, b.dnum, due)
-        lat, cstall, mstall = _combine(t, hw)
-        res.latency_s += lat
+        block_times.append((t, b.volumes))
         res.xpu_busy_s += t["xpu"]
         res.xmu_busy_s += t["xmu"]
         res.comm_busy_s += t["comm"]
-        res.comm_stall_s += cstall
-        res.mem_stall_s += mstall
         res.volumes = res.volumes + b.volumes
+        if mode == "analytic":
+            lat, cstall, mstall = _combine(t, hw)
+            res.latency_s += lat
+            res.comm_stall_s += cstall
+            res.mem_stall_s += mstall
+    if mode == "pipelined":
+        sched = schedule_blocks(block_times, hw)
+        res.latency_s = sched.makespan
+        res.comm_stall_s = sched.comm_stall_s
+        res.mem_stall_s = sched.mem_stall_s
+        res.timelines = sched.timelines()
+        res.engine_busy_s = {e: sched.busy(e) for e in ENGINES}
     link_bytes = (res.volumes.comm_words + res.volumes.evk_load_words) \
         * WORD_BYTES
     # busy-time dynamic power + 10% static floor
@@ -184,21 +223,25 @@ def _evk_keys_for(pkb: PKB, strategy: str, k: int, alpha: int, nh: int):
 def simulate_program(dfg, hw: HWConfig, strategy: str = "hoist",
                      dataflow: str = "hybrid", fusion: bool = False,
                      nh: int = 1 << 15, k: int = 12, alpha: int = 12,
-                     name: str | None = None) -> SimResult:
+                     name: str | None = None,
+                     mode: str = "pipelined") -> SimResult:
     """strategy: 'minks' | 'plain' | 'hoist'; dataflow 'IRF'|'EVF'|'hybrid'.
     fusion=True applies the HERO DP (scored with THIS hw's pipeline model)
-    before mapping."""
+    before mapping.  mode: 'pipelined' (event-driven group scheduler) or
+    'analytic' (closed-form per-block combiner, serial block sum)."""
     pkbs = identify_pkbs(dfg)
+    weights = _pipeline_weights(hw, mode)
     if fusion:
         plan = optimal_fusion(
             pkbs, k, alpha, nh, capacity_words=hw.evk_capacity_words(),
-            weights=_pipeline_weights(hw), dataflow="IRF",
+            weights=weights, dataflow="IRF",
         )
         pkbs = plan.fused
-    mode = dataflow
+    df_mode = dataflow
     if dataflow == "hybrid" and hw.onchip_mb < 60:
-        mode = "IRF"      # SM cannot buffer an evk on-chip
-    mapped = map_program(pkbs, k, alpha, nh, mode=mode, strategy=strategy)
+        df_mode = "IRF"      # SM cannot buffer an evk on-chip
+    mapped = map_program(pkbs, k, alpha, nh, mode=df_mode,
+                         strategy=strategy, weights=weights)
     blocks = []
     for m in mapped:
         streams = m.dataflow == "EVF"
@@ -209,27 +252,36 @@ def simulate_program(dfg, hw: HWConfig, strategy: str = "hoist",
         ))
     extra, residual = non_pkb_blocks(
         dfg, pkbs, k, alpha,
-        dataflow=("IRF" if mode == "IRF" else "EVF"),
+        dataflow=("IRF" if df_mode == "IRF" else "EVF"),
     )
     for v in extra:
         # relin/conj keys are shared program-wide; identity by size
         key = (("relin", v.evk_set_words), v.evk_set_words)
-        blocks.append(Block(v, max(1, v.ip_count), (key,), mode != "IRF"))
+        blocks.append(Block(v, max(1, v.ip_count), (key,),
+                            df_mode != "IRF"))
     blocks.append(Block(residual, 1))
     return simulate_blocks(
         blocks, hw,
-        name or f"{hw.name}/{strategy}/{dataflow}" + ("/fused" if fusion else ""),
+        name or f"{hw.name}/{strategy}/{dataflow}"
+        + ("/fused" if fusion else ""),
+        mode=mode,
     )
 
 
-def _pipeline_weights(hw: HWConfig) -> CostWeights:
-    """CostWeights whose .seconds() delegates to the hw pipeline model —
-    so the fusion DP optimizes what the simulator measures."""
+def _pipeline_weights(hw: HWConfig, mode: str = "pipelined") -> CostWeights:
+    """CostWeights whose block cost delegates to the hw pipeline model —
+    so the fusion DP and the hybrid dataflow choice optimize what the
+    simulator measures (the scheduled group-pipeline makespan under
+    mode='pipelined', the closed-form block time under 'analytic')."""
 
     class _W(CostWeights):
-        def seconds(self, v: OpVolumes) -> float:  # type: ignore[override]
+        def block_seconds(self, v: OpVolumes) -> float:  # noqa: D102
             dnum = max(1, round(v.modup_count or 1))
             return block_time(v, dnum, hw,
-                              v.evk_load_words and v.evk_set_words or 0.0)
+                              v.evk_load_words and v.evk_set_words or 0.0,
+                              mode=mode)
+
+        def seconds(self, v: OpVolumes) -> float:  # type: ignore[override]
+            return self.block_seconds(v)
 
     return _W()

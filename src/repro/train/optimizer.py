@@ -7,7 +7,6 @@ arctic-480b / jamba-398b training in 16 GB/chip HBM at 256 chips
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.pipeline import TokenPipeline
 from repro.models.steps import loss_fn
 from repro.train.checkpoint import CheckpointManager
 from repro.train.compression import compress_grads_int8, decompress_grads

@@ -71,8 +71,6 @@ def test_full_bootstrap(btp, boot_ctx, rng):
 def test_mod_raise_exact(boot_ctx, rng):
     """ModRaise: decrypted coefficients == level-0 coefficients mod q0,
     with the q0-multiples (the I overflow) bounded by the sparse secret."""
-    import jax.numpy as jnp
-
     from repro.core import poly
     from repro.core.encoding import centered_crt
 

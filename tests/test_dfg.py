@@ -4,8 +4,7 @@ import numpy as np
 import pytest
 
 from repro.dfg.fusion import (
-    CostWeights, FusedPKB, fuse_functional, fuse_group, fuse_pair,
-    fuse_score, optimal_fusion,
+    CostWeights, fuse_functional, fuse_pair, fuse_score, optimal_fusion,
 )
 from repro.dfg.graph import OpKind
 from repro.dfg.hoist import pkb_volumes, program_volumes

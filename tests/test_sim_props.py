@@ -1,0 +1,28 @@
+"""Hypothesis property tests for the performance simulator.
+
+Guarded with importorskip so a bare interpreter (no hypothesis) still
+collects and runs the behaviour tests in test_sim.py.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.dfg.programs import bootstrapping_dfg  # noqa: E402
+from repro.sim import HE2_SM  # noqa: E402
+from repro.sim.engine import simulate_program  # noqa: E402
+from repro.sim.hw import with_bandwidth  # noqa: E402
+
+
+@settings(max_examples=6, deadline=None)
+@given(bw=st.sampled_from([0.25, 0.5, 1.0, 2.0, 4.0]),
+       mode=st.sampled_from(["pipelined", "analytic"]))
+def test_prop_bandwidth_monotonic(bw, mode):
+    """More link bandwidth never slows HE2 down (Fig. 17(a)), in both
+    the scheduled and the analytic model."""
+    g = bootstrapping_dfg(bsgs_bs=0).g
+    lo = simulate_program(g, with_bandwidth(HE2_SM, bw), "hoist", "IRF",
+                          mode=mode)
+    hi = simulate_program(g, with_bandwidth(HE2_SM, bw * 2), "hoist",
+                          "IRF", mode=mode)
+    assert hi.latency_s <= lo.latency_s * (1 + 1e-9)

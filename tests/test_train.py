@@ -1,6 +1,5 @@
 """Training substrate tests: optimizer, checkpoint/resume, compression,
 data pipeline determinism, end-to-end loss decrease (deliverable (b))."""
-import os
 
 import numpy as np
 import pytest
