@@ -1,0 +1,129 @@
+"""Keyswitch engine microbenchmark: seed per-digit loops vs the batched
+jit engine (jnp backend) vs the Pallas kernel backend.
+
+Times ``keyswitch`` (via multiply's relin), ``rotate``, and
+``hoisted_rotation_sum`` on a (logN=13, dnum=3) context — the ROADMAP's
+"hot path measurably faster" tracker.  Writes BENCH_keyswitch.json with
+per-op us/call and seed/engine speedups; CI uploads it as an artifact.
+
+The pallas backend runs ``interpret=True`` on CPU (functional parity,
+not speed) — it is timed with one repetition for the record, on a
+reduced ring so the interpreter cost stays bounded.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+ROT_STEPS = [1, 2, 3, 4, 5, 6]   # >= 4 hoisted rotations (acceptance gate)
+
+# Perf regression gate: the batched jit engine must beat the seed
+# per-digit path by at least this factor on hoisted_rotation_sum.
+# Measured ~11-14x on CPU; enforced (raises) in smoke and full runs so
+# CI fails loudly if the hot path regresses.
+GATE_HOISTED_SPEEDUP = 3.0
+
+
+def _params(logn: int):
+    from repro.core.params import CKKSParams
+
+    # L=5, alpha=2 -> dnum=3 decomposition digits; k=3 noise headroom.
+    return CKKSParams(logN=logn, L=5, alpha=2, k=3, q_bits=29,
+                      scale_bits=29)
+
+
+def _time_op(fn, reps: int) -> float:
+    """us/call after one warmup (jit trace / dispatch-cache fill)."""
+    fn().c0.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    out.c0.block_until_ready()
+    return (time.perf_counter() - t0) * 1e6 / reps
+
+
+def _bench_ctx(ctx, ct, pts, steps, reps: int) -> dict[str, float]:
+    return {
+        "multiply": _time_op(lambda: ctx.multiply(ct, ct), reps),
+        "rotate": _time_op(lambda: ctx.rotate(ct, 3), reps),
+        "hoisted_rotation_sum": _time_op(
+            lambda: ctx.hoisted_rotation_sum(ct, steps, pts), reps
+        ),
+    }
+
+
+def run() -> list[str]:
+    from repro.core.ckks import CKKSContext
+
+    RESULTS.mkdir(exist_ok=True)
+    logn = 11 if common.SMOKE else 13
+    pallas_logn = 9 if common.SMOKE else 11
+    steps = ROT_STEPS[:4] if common.SMOKE else ROT_STEPS
+    reps_seed = 1 if common.SMOKE else 2
+    reps_engine = 3 if common.SMOKE else 10
+
+    rng = np.random.default_rng(0)
+    summary: dict = {"params": {"logN": logn, "L": 5, "alpha": 2, "dnum": 3,
+                                "rotations": len(steps)},
+                     "pallas_logN": pallas_logn}
+    lines = []
+
+    p = _params(logn)
+    ctx = CKKSContext(p, seed=3)
+    nh = p.num_slots
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    ct = ctx.encrypt(z)
+    pts = [ctx.encode(rng.normal(size=nh)) for _ in steps]
+    for s in steps:
+        ctx.keys.rot_key(s)  # keygen outside the timed region
+
+    ctx.use_engine = False
+    summary["seed"] = _bench_ctx(ctx, ct, pts, steps, reps_seed)
+    ctx.use_engine = True
+    summary["engine_jnp"] = _bench_ctx(ctx, ct, pts, steps, reps_engine)
+
+    # Pallas backend (interpret mode off-TPU): parity record, 1 rep.
+    pp = _params(pallas_logn)
+    ctx_p = CKKSContext(pp, seed=3, backend="pallas")
+    zp = rng.normal(size=pp.num_slots) + 1j * rng.normal(size=pp.num_slots)
+    ct_p = ctx_p.encrypt(zp)
+    pts_p = [ctx_p.encode(rng.normal(size=pp.num_slots)) for _ in steps]
+    summary["engine_pallas"] = _bench_ctx(ctx_p, ct_p, pts_p, steps, 1)
+
+    summary["speedup_vs_seed"] = {
+        op: summary["seed"][op] / summary["engine_jnp"][op]
+        for op in summary["seed"]
+    }
+    for op in summary["seed"]:
+        lines.append(
+            f"keyswitch/{op}/seed,{summary['seed'][op]:.0f},logN={logn}"
+        )
+        lines.append(
+            f"keyswitch/{op}/engine_jnp,{summary['engine_jnp'][op]:.0f},"
+            f"speedup={summary['speedup_vs_seed'][op]:.2f}x"
+        )
+        lines.append(
+            f"keyswitch/{op}/engine_pallas,"
+            f"{summary['engine_pallas'][op]:.0f},"
+            f"interpret=True;logN={pallas_logn}"
+        )
+    hoisted = summary["speedup_vs_seed"]["hoisted_rotation_sum"]
+    summary["gate"] = {"hoisted_min_speedup": GATE_HOISTED_SPEEDUP,
+                       "hoisted_speedup": hoisted,
+                       "passed": hoisted >= GATE_HOISTED_SPEEDUP}
+    (RESULTS / "BENCH_keyswitch.json").write_text(
+        json.dumps(summary, indent=2)
+    )
+    if hoisted < GATE_HOISTED_SPEEDUP:
+        raise RuntimeError(
+            f"keyswitch engine perf gate FAILED: hoisted_rotation_sum "
+            f"{hoisted:.2f}x < {GATE_HOISTED_SPEEDUP}x vs seed path"
+        )
+    return lines

@@ -16,6 +16,9 @@ import numpy as np
 from repro.core import poly
 from repro.core.encoding import Encoder
 from repro.core.keys import EvalKey, KeyChain, sample_gaussian, to_rns
+from repro.core.keyswitch import (
+    KeyswitchEngine, _to_mont_host_rows, ext_rows,
+)
 from repro.core.params import CKKSParams
 
 
@@ -39,17 +42,31 @@ class Plaintext:
 
 
 class CKKSContext:
-    """Everything needed to run CKKS programs functionally."""
+    """Everything needed to run CKKS programs functionally.
+
+    ``backend`` ("jnp" | "pallas") selects the keyswitch engine's
+    numeric implementation; ``use_engine=False`` falls back to the seed
+    per-digit/per-rotation loop path (kept for benchmarking and parity
+    tests — both paths are bit-exact).
+    """
 
     def __init__(self, params: CKKSParams, seed: int = 1234,
-                 hamming_weight: int | None = None):
+                 hamming_weight: int | None = None,
+                 backend: str = "jnp", use_engine: bool = True):
         self.params = params
-        self.pc = poly.PolyContext(params)
+        self.pc = poly.PolyContext(params, backend=backend)
         self.encoder = Encoder(params)
         self.keys = KeyChain(
             params, self.pc, seed=seed, hamming_weight=hamming_weight
         )
         self.rng = np.random.default_rng(seed + 1)
+        self.engine = KeyswitchEngine(self.pc)
+        self.use_engine = use_engine
+        # (pt ids, level) -> (pts, pm_ext, pm_base, pm_ext_mont); the pts
+        # tuple pins the objects so ids cannot be reused.  Bounded (FIFO
+        # eviction): fresh plaintext sets must not accumulate forever.
+        self._pm_stacks: dict[tuple, tuple] = {}
+        self._pm_stacks_max = 32
 
     # ------------------------- helpers --------------------------------
     def chain(self, level: int) -> tuple[int, ...]:
@@ -60,10 +77,7 @@ class CKKSContext:
 
     def _ext_rows(self, level: int) -> np.ndarray:
         """Rows of a full-basis evk active at ``level``."""
-        L, k = self.params.L, self.params.k
-        return np.concatenate(
-            [np.arange(level + 1), np.arange(L + 1, L + 1 + k)]
-        )
+        return ext_rows(self.params, level)
 
     # ------------------------- encode / encrypt ------------------------
     def encode(self, z, level: int | None = None,
@@ -152,6 +166,9 @@ class CKKSContext:
         return Ciphertext(ct.c0[:n], ct.c1[:n], target, ct.scale)
 
     # ------------------------- keyswitch core --------------------------
+    # The batched jit engine (repro.core.keyswitch) is the default hot
+    # path; the seed per-digit loop methods below are retained as the
+    # bit-exact reference baseline (benchmarks + parity tests).
     def modup_digits(self, a: jnp.ndarray, level: int) -> list[jnp.ndarray]:
         """Decompose+ModUp a (level+1, N) poly to the extended basis."""
         groups = self.params.digit_groups(level)
@@ -181,14 +198,21 @@ class CKKSContext:
             acc1 = t1 if acc1 is None else poly.add(acc1, t1, mods)
         return acc0, acc1
 
-    def keyswitch(self, a: jnp.ndarray, evk: EvalKey,
-                  level: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """Full keyswitch of poly ``a``: ModUp -> IP -> ModDown."""
+    def keyswitch_seed(self, a: jnp.ndarray, evk: EvalKey,
+                       level: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Seed per-digit keyswitch: ModUp -> IP -> ModDown loops."""
         digits = self.modup_digits(a, level)
         acc0, acc1 = self.inner_product(digits, evk, level)
         d0 = poly.moddown(acc0, level, self.pc)
         d1 = poly.moddown(acc1, level, self.pc)
         return d0, d1
+
+    def keyswitch(self, a: jnp.ndarray, evk: EvalKey,
+                  level: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Full keyswitch of poly ``a``: ModUp -> IP -> ModDown."""
+        if self.use_engine:
+            return self.engine.keyswitch(a, evk, level)
+        return self.keyswitch_seed(a, evk, level)
 
     # ------------------------- mult / rotate ---------------------------
     def multiply(self, a: Ciphertext, b: Ciphertext,
@@ -214,11 +238,14 @@ class CKKSContext:
     def _apply_galois(self, ct: Ciphertext, galois: int,
                       evk: EvalKey) -> Ciphertext:
         lvl = ct.level
+        if self.use_engine:
+            c0, c1 = self.engine.apply_galois(ct.c0, ct.c1, galois, evk, lvl)
+            return Ciphertext(c0, c1, lvl, ct.scale)
         primes = self.chain(lvl)
         mods = self.pc.mods(primes)
         c0r = poly.automorphism(ct.c0, primes, galois, self.pc)
         c1r = poly.automorphism(ct.c1, primes, galois, self.pc)
-        d0, d1 = self.keyswitch(c1r, evk, lvl)
+        d0, d1 = self.keyswitch_seed(c1r, evk, lvl)
         return Ciphertext(
             poly.add(c0r, d0, mods), d1, lvl, ct.scale
         )
@@ -246,6 +273,30 @@ class CKKSContext:
         plaintext muls — Eq. (1)) are accumulated in the extended basis;
         a single ModDown closes the block.
         """
+        lvl = ct.level
+        steps_norm = [s % self.params.num_slots for s in steps_list]
+        if self.use_engine:
+            gs = [self.pc.rns.galois_for_rotation(s) for s in steps_norm]
+            keys = [self.keys.rot_key(s) for s in steps_norm]
+            pm_ext = pm_base = pm_ext_m = None
+            if pts is not None:
+                assert all(pt.level == lvl for pt in pts)
+                pm_ext, pm_base, pm_ext_m = self._pm_stack(tuple(pts), lvl)
+            c0, c1 = self.engine.hoisted_rotation_sum(
+                ct.c0, ct.c1, gs, keys, lvl, pm_ext, pm_base, pm_ext_m
+            )
+            out_scale = ct.scale * (pts[0].scale if pts is not None else 1.0)
+            out = Ciphertext(c0, c1, lvl, out_scale)
+            if pts is not None and rescale:
+                out = self.rescale(out)
+            return out
+        return self._hoisted_rotation_sum_seed(ct, steps_norm, pts, rescale)
+
+    def _hoisted_rotation_sum_seed(
+        self, ct: Ciphertext, steps_list: list[int],
+        pts: list[Plaintext] | None = None, rescale: bool = True,
+    ) -> Ciphertext:
+        """Seed path: per-rotation automorphism/IP loops (reference)."""
         lvl = ct.level
         base = self.chain(lvl)
         ext = self.ext_basis(lvl)
@@ -299,7 +350,16 @@ class CKKSContext:
         (which exceeds P/k) and destroy the message — this is why the paper
         cites the dedicated PModUp of MAD [1].  Plaintext coefficients are
         small, so the exact lift is just a centered lift + reduction.
+
+        The centered lift reduces via a vectorized object-array ``%``
+        (not a per-coefficient Python loop), and the result is cached on
+        the plaintext per level — hoisted blocks reuse the same pt set.
         """
+        cache = getattr(pt, "_pmodup_cache", None)
+        if cache is None:
+            cache = pt._pmodup_cache = {}
+        if level in cache:
+            return cache[level]
         from repro.core.encoding import centered_crt
 
         base = self.chain(level)
@@ -307,10 +367,42 @@ class CKKSContext:
         coeff = poly.intt(pt.m[: level + 1], base, self.pc)
         centered = centered_crt(np.asarray(coeff), base)
         new = tuple(p for p in ext if p not in base)
-        lifted = np.empty((len(new), self.params.N), dtype=np.uint64)
-        for i, q in enumerate(new):
-            lifted[i] = np.array(
-                [int(c) % q for c in centered], dtype=np.uint64
-            )
+        lifted = np.stack(
+            [(centered % q).astype(np.uint64) for q in new]
+        )
         conv_eval = poly.ntt(jnp.asarray(lifted), new, self.pc)
-        return jnp.concatenate([pt.m[: level + 1], conv_eval], axis=0)
+        out = jnp.concatenate([pt.m[: level + 1], conv_eval], axis=0)
+        cache[level] = out
+        return out
+
+    def _pm_stack(self, pts: tuple[Plaintext, ...], level: int):
+        """Stacked hoisted-block plaintext tensors, cached per (pts, level)
+        like the engine's evk group tensors.  The uint64 extended stack is
+        only built for the jnp backend (the pallas fused-IP kernel reads
+        the Montgomery form instead)."""
+        key = (tuple(id(pt) for pt in pts), level)
+        if key not in self._pm_stacks:
+            pallas = self.pc.backend == "pallas"
+            pm_ext = (None if pallas else
+                      jnp.stack([self._pmodup(pt, level) for pt in pts]))
+            pm_base = jnp.stack([pt.m[: level + 1] for pt in pts])
+            pm_ext_m = (jnp.stack(
+                [self._pmodup_mont(pt, level) for pt in pts]
+            ) if pallas else None)
+            while len(self._pm_stacks) >= self._pm_stacks_max:
+                self._pm_stacks.pop(next(iter(self._pm_stacks)))
+            self._pm_stacks[key] = (pts, pm_ext, pm_base, pm_ext_m)
+        return self._pm_stacks[key][1:]
+
+    def _pmodup_mont(self, pt: Plaintext, level: int) -> jnp.ndarray:
+        """Montgomery uint32 form of ``_pmodup`` (pallas fused-IP PMul),
+        cached alongside the uint64 lift."""
+        cache = getattr(pt, "_pmodup_cache", None)
+        if cache is None:
+            cache = pt._pmodup_cache = {}
+        key = (level, "mont")
+        if key not in cache:
+            pm = np.asarray(self._pmodup(pt, level))
+            q = np.array(self.ext_basis(level), dtype=np.uint64)
+            cache[key] = jnp.asarray(_to_mont_host_rows(pm, q))
+        return cache[key]

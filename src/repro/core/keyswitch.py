@@ -1,0 +1,411 @@
+"""Batched, jit-compiled keyswitch engine: ModUp -> IP -> ModDown.
+
+The seed runtime executes keyswitch as per-digit / per-rotation Python
+loops over generic uint64 ``%`` jnp ops.  This engine replaces that hot
+path with one traced program per ``(level, dnum)`` plan:
+
+  * digits live as ONE stacked ``(dnum, l_ext, N)`` tensor — ModUp is a
+    single batched INTT over all base limbs, a block-diagonal BConv
+    contraction (per-digit constants packed into one ``(dnum, alpha,
+    l_ext)`` tensor), and one batched NTT over all dnum x l_ext new
+    limbs, with own-limb passthrough applied as a gather + where;
+  * the inner product is one fused contraction against the pre-stacked
+    evk tensor ``(dnum, 2, l_ext, N)`` — the ``kernels/fused_ip``
+    layout;
+  * hoisted rotations apply automorphisms IN THE EVAL DOMAIN via one
+    precomputed gather-index tensor ``(R, N)`` covering all digits and
+    rotations (see ``RNSContext.autom_eval_perm``) — no per-rotation
+    INTT/NTT round trips;
+  * ModDown runs batched over both accumulator polynomials at once.
+
+Every plan traces once under ``jax.jit`` and is cached; re-dispatch at
+the same level is a cache hit (``trace_counts`` records trace events).
+
+Backends (``PolyContext.backend``):
+  * ``"jnp"``    — exact uint64 ``(a * b) % q`` ops, batched as above.
+  * ``"pallas"`` — NTT/BConv/IP dispatch to the uint32 Montgomery
+    Pallas kernel suite (``kernels/ntt``, ``kernels/bconv``,
+    ``kernels/fused_ip``), ``interpret=True`` off-TPU.  The kernels'
+    bit-reversed eval order is bridged to the core's natural order by a
+    single ``bitrev`` permutation at NTT boundaries; Montgomery evk /
+    plaintext tables are built once per context and cached.
+
+Both backends are bit-exact with the seed per-digit path (enforced by
+``tests/test_keyswitch_engine.py``).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import poly
+from repro.kernels.bconv.ops import bconv_kernel
+from repro.kernels.fused_ip.ops import fused_ip_mont
+from repro.kernels.modops import default_interpret, qinv_neg_host
+from repro.kernels.ntt.ops import ntt_fwd, ntt_inv, tables_for
+
+if TYPE_CHECKING:  # avoid importing keys at runtime (ckks -> keyswitch)
+    from repro.core.keys import EvalKey
+
+# Source-limb chunk bounding the (dnum, chunk, l_ext, N) BConv
+# intermediate — the VMEM-resident working-set analogue of the Pallas
+# BConvU's coefficient blocking.
+_CHUNK = 8
+
+
+def ext_rows(params, level: int) -> np.ndarray:
+    """Rows of a full-basis (Q_L u P) evk tensor active at ``level``."""
+    L, k = params.L, params.k
+    return np.concatenate(
+        [np.arange(level + 1), np.arange(L + 1, L + 1 + k)]
+    )
+
+
+def _to_mont_host_rows(arr: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """Montgomery-convert (..., l, N) uint64 with per-row moduli (l,).
+
+    Exact object-int arithmetic, vectorized; done once per evk/plaintext
+    and cached by the engine.
+    """
+    shape = (1,) * (arr.ndim - 2) + (len(q), 1)
+    qcol = q.astype(object).reshape(shape)
+    return ((arr.astype(object) << 32) % qcol).astype(np.uint32)
+
+
+class KeyswitchPlan:
+    """Per-level constants: index tensors, packed BConv constants, mods."""
+
+    def __init__(self, pc: poly.PolyContext, level: int):
+        params = pc.params
+        rns = pc.rns
+        self.level = level
+        self.base: tuple[int, ...] = params.q_chain(level)
+        self.ext: tuple[int, ...] = self.base + params.p_primes
+        self.groups = params.digit_groups(level)
+        self.dnum = len(self.groups)
+        self.alpha = max(len(D) for D in self.groups)
+        self.l = len(self.base)
+        self.l_ext = len(self.ext)
+        self.k = len(params.p_primes)
+        self.N = params.N
+
+        # Static primes tuples for batched NTT dispatch (duplicates OK).
+        self.ext_tiled = self.ext * self.dnum
+        self.p_tiled = params.p_primes * 2
+        self.base_tiled = self.base * 2
+
+        self.base_mods = jnp.asarray(np.array(self.base, dtype=np.uint64))
+        self.ext_mods = jnp.asarray(np.array(self.ext, dtype=np.uint64))
+        self.p_mods = jnp.asarray(np.array(params.p_primes, dtype=np.uint64))
+
+        # --- ModUp: per-limb scale constants + block-diagonal reduce ---
+        qinv = np.zeros(self.l, dtype=np.uint64)
+        src_idx = np.zeros((self.dnum, self.alpha), dtype=np.int32)
+        C = np.zeros((self.dnum, self.alpha, self.l_ext), dtype=np.uint64)
+        row = 0
+        for j, D in enumerate(self.groups):
+            qhat_inv, qhat_mod = rns.bconv_consts(tuple(D), self.ext)
+            for i in range(len(D)):
+                qinv[row + i] = qhat_inv[i]
+                src_idx[j, i] = row + i
+                C[j, i] = qhat_mod[i]
+            row += len(D)
+        self.qinv = jnp.asarray(qinv)
+        self.src_idx = jnp.asarray(src_idx)
+        self.C = jnp.asarray(C)
+
+        # Own-limb passthrough: digit j keeps its eval-domain rows.
+        own_idx = np.zeros((self.dnum, self.l_ext), dtype=np.int32)
+        own_mask = np.zeros((self.dnum, self.l_ext), dtype=bool)
+        base_pos = {p: i for i, p in enumerate(self.base)}
+        for j, D in enumerate(self.groups):
+            for r, p in enumerate(self.ext):
+                if p in D:
+                    own_idx[j, r] = base_pos[p]
+                    own_mask[j, r] = True
+        self.own_idx = jnp.asarray(own_idx)
+        self.own_mask = jnp.asarray(own_mask)
+
+        # --- ModDown: P -> Q_level conversion constants ---
+        md_qhat_inv, md_C = rns.bconv_consts(params.p_primes, self.base)
+        self.md_qhat_inv = jnp.asarray(md_qhat_inv)
+        self.md_C = jnp.asarray(md_C)                  # (k, l)
+        self.pinv = jnp.asarray(rns.p_inv_mod_q(level))
+
+        # --- Pallas backend extras ---
+        self.bitrev = np.asarray(pc.rns.bitrev)
+        q32 = np.array(self.ext, dtype=np.uint32).reshape(self.l_ext, 1)
+        qneg32 = np.array(
+            [qinv_neg_host(q) for q in self.ext], dtype=np.uint32
+        ).reshape(self.l_ext, 1)
+        self.q32 = jnp.asarray(q32)
+        self.qneg32 = jnp.asarray(qneg32)
+
+
+class KeyswitchEngine:
+    """Jit-compiled batched keyswitch over a ``PolyContext``.
+
+    One trace per (level, op-shape); evk tensors stacked (and, for the
+    pallas backend, Montgomery-converted) once per key and cached.
+    """
+
+    def __init__(self, pc: poly.PolyContext):
+        self.pc = pc
+        self.params = pc.params
+        self.backend = pc.backend
+        self.interpret = default_interpret()
+        self.tabs = tables_for(pc.params) if self.backend == "pallas" else None
+        self._plans: dict[int, KeyswitchPlan] = {}
+        self._ks_fns: dict[int, object] = {}
+        self._galois_fns: dict[int, object] = {}
+        self._hoist_fns: dict[tuple, object] = {}
+        self._evk_full: dict[int, tuple] = {}     # id(evk) -> (evk, stacked)
+        self._evk_level: dict[tuple, jnp.ndarray] = {}
+        self._evk_group: dict[tuple, jnp.ndarray] = {}
+        self._perm_cache: dict[tuple, jnp.ndarray] = {}
+        self.trace_counts: dict[tuple, int] = {}
+
+    # ------------------------- plans / tracing -------------------------
+    def _plan(self, level: int) -> KeyswitchPlan:
+        if level not in self._plans:
+            self._plans[level] = KeyswitchPlan(self.pc, level)
+        return self._plans[level]
+
+    def _count_trace(self, key: tuple) -> None:
+        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+
+    # ------------------------- evk stacking ----------------------------
+    def _evk_stacked(self, evk: EvalKey) -> jnp.ndarray:
+        """(dnum_full, 2, L+1+k, N) uint64, cached per key object."""
+        key = id(evk)
+        if key not in self._evk_full:
+            self._evk_full[key] = (evk, jnp.stack(evk.digits))
+        return self._evk_full[key][1]
+
+    def evk_tensor(self, evk: EvalKey, level: int) -> jnp.ndarray:
+        """Level-sliced evk tensor (dnum, 2, l_ext, N) — uint64 for the
+        jnp backend, Montgomery uint32 for pallas.  Cached."""
+        key = (id(evk), level)
+        if key not in self._evk_level:
+            plan = self._plan(level)
+            full = self._evk_stacked(evk)
+            sl = full[: plan.dnum][:, :, ext_rows(self.params, level)]
+            if self.backend == "pallas":
+                sl = jnp.asarray(_to_mont_host_rows(
+                    np.asarray(sl), np.array(plan.ext, dtype=np.uint64)
+                ))
+            self._evk_level[key] = sl
+        return self._evk_level[key]
+
+    def evk_group_tensor(self, evks: list[EvalKey],
+                         level: int) -> jnp.ndarray:
+        """(R, dnum, 2, l_ext, N) stack for a hoisted rotation group.
+        Bounded (FIFO eviction) — rotation groups vary across programs."""
+        key = (tuple(id(k) for k in evks), level)
+        if key not in self._evk_group:
+            while len(self._evk_group) >= 64:
+                self._evk_group.pop(next(iter(self._evk_group)))
+            self._evk_group[key] = jnp.stack(
+                [self.evk_tensor(k, level) for k in evks]
+            )
+        return self._evk_group[key]
+
+    def perm_tensor(self, galois_list: list[int]) -> jnp.ndarray:
+        """(R, N) eval-domain automorphism gather indices."""
+        key = tuple(galois_list)
+        if key not in self._perm_cache:
+            self._perm_cache[key] = jnp.asarray(np.stack(
+                [self.pc.rns.autom_eval_perm(g).astype(np.int32)
+                 for g in galois_list]
+            ))
+        return self._perm_cache[key]
+
+    # ------------------------- traced primitives -----------------------
+    def _ntt(self, x, primes, plan: KeyswitchPlan):
+        """Batched forward NTT, core (natural) eval order in/out."""
+        if self.backend == "pallas":
+            y = ntt_fwd(x.astype(jnp.uint32), primes, self.tabs,
+                        interpret=self.interpret)
+            return y[:, plan.bitrev].astype(jnp.uint64)
+        return poly.ntt(x, primes, self.pc)
+
+    def _intt(self, x, primes, plan: KeyswitchPlan):
+        if self.backend == "pallas":
+            y = ntt_inv(x[:, plan.bitrev].astype(jnp.uint32), primes,
+                        self.tabs, interpret=self.interpret)
+            return y.astype(jnp.uint64)
+        return poly.intt(x, primes, self.pc)
+
+    def _modup(self, a, plan: KeyswitchPlan):
+        """(l, N) eval -> (dnum, l_ext, N) eval, all digits at once."""
+        coeff = self._intt(a, plan.base, plan)
+        if self.backend == "pallas":
+            digs = []
+            row = 0
+            for D in plan.groups:
+                digs.append(bconv_kernel(
+                    coeff[row : row + len(D)].astype(jnp.uint32), D,
+                    plan.ext, self.pc.rns, interpret=self.interpret,
+                ))
+                row += len(D)
+            conv = jnp.stack(digs).astype(jnp.uint64)
+            conv = conv.reshape(plan.dnum * plan.l_ext, plan.N)
+        else:
+            t = (coeff * plan.qinv[:, None]) % plan.base_mods[:, None]
+            td = t[plan.src_idx]                       # (dnum, alpha, N)
+            em = plan.ext_mods[None, :, None]
+            conv = jnp.zeros(
+                (plan.dnum, plan.l_ext, plan.N), dtype=jnp.uint64
+            )
+            for i in range(0, plan.alpha, _CHUNK):
+                part = (
+                    td[:, i : i + _CHUNK, None, :]
+                    * plan.C[:, i : i + _CHUNK, :, None]
+                ) % em[None]
+                conv = (conv + part.sum(axis=1)) % em
+            conv = conv.reshape(plan.dnum * plan.l_ext, plan.N)
+        conv = self._ntt(conv, plan.ext_tiled, plan)
+        conv = conv.reshape(plan.dnum, plan.l_ext, plan.N)
+        own = a[plan.own_idx]                          # (dnum, l_ext, N)
+        return jnp.where(plan.own_mask[:, :, None], own, conv)
+
+    def _ip(self, digits, evk, plan: KeyswitchPlan):
+        """(dnum, l_ext, N) x (dnum, 2, l_ext, N) -> (2, l_ext, N)."""
+        if self.backend == "pallas":
+            a0, a1 = fused_ip_mont(
+                digits.astype(jnp.uint32), evk, None, plan.q32, plan.qneg32,
+                interpret=self.interpret,
+            )
+            return jnp.stack([a0, a1]).astype(jnp.uint64)
+        em = plan.ext_mods[None, None, :, None]
+        prod = (digits[:, None] * evk) % em            # (dnum, 2, l_ext, N)
+        return prod.sum(axis=0) % em[0]
+
+    def _moddown2(self, acc, plan: KeyswitchPlan):
+        """Batched ModDown of both accumulators: (2, l_ext, N) -> (2, l, N)."""
+        xq, xp = acc[:, : plan.l], acc[:, plan.l :]
+        xpc = self._intt(
+            xp.reshape(2 * plan.k, plan.N), plan.p_tiled, plan
+        )
+        bm = plan.base_mods[None, :, None]
+        if self.backend == "pallas":
+            conv = jnp.stack([
+                bconv_kernel(
+                    xpc[c * plan.k : (c + 1) * plan.k].astype(jnp.uint32),
+                    self.params.p_primes, plan.base, self.pc.rns,
+                    interpret=self.interpret,
+                )
+                for c in range(2)
+            ]).astype(jnp.uint64)
+        else:
+            xpc = xpc.reshape(2, plan.k, plan.N)
+            t = (xpc * plan.md_qhat_inv[None, :, None]) % plan.p_mods[None, :, None]
+            conv = jnp.zeros((2, plan.l, plan.N), dtype=jnp.uint64)
+            for i in range(0, plan.k, _CHUNK):
+                part = (
+                    t[:, i : i + _CHUNK, None, :]
+                    * plan.md_C[None, i : i + _CHUNK, :, None]
+                ) % bm[:, None]
+                conv = (conv + part.sum(axis=1)) % bm
+        conv = self._ntt(
+            conv.reshape(2 * plan.l, plan.N), plan.base_tiled, plan
+        ).reshape(2, plan.l, plan.N)
+        diff = (xq + bm - conv) % bm
+        return (diff * plan.pinv[None, :, None]) % bm
+
+    # ------------------------- jitted entry points ---------------------
+    def _ks_fn(self, level: int):
+        if level not in self._ks_fns:
+            plan = self._plan(level)
+
+            def fn(a, evk):
+                self._count_trace(("keyswitch", level))
+                digits = self._modup(a, plan)
+                d = self._moddown2(self._ip(digits, evk, plan), plan)
+                return d[0], d[1]
+
+            self._ks_fns[level] = jax.jit(fn)
+        return self._ks_fns[level]
+
+    def _galois_fn(self, level: int):
+        if level not in self._galois_fns:
+            plan = self._plan(level)
+
+            def fn(c0, c1, perm, evk):
+                self._count_trace(("galois", level))
+                digits = self._modup(c1[:, perm], plan)
+                d = self._moddown2(self._ip(digits, evk, plan), plan)
+                bm = plan.base_mods[:, None]
+                return (c0[:, perm] + d[0]) % bm, d[1]
+
+            self._galois_fns[level] = jax.jit(fn)
+        return self._galois_fns[level]
+
+    def _hoist_fn(self, level: int, n_rot: int, with_pt: bool):
+        key = (level, n_rot, with_pt)
+        if key not in self._hoist_fns:
+            plan = self._plan(level)
+
+            def fn(c0, c1, perms, evk_all, pm_ext, pm_base, pm_ext_m):
+                self._count_trace(("hoisted", level, n_rot, with_pt))
+                digits = self._modup(c1, plan)
+                # One gather rotates ALL digits for ALL rotations.
+                d_rot = jnp.transpose(
+                    digits[:, :, perms], (2, 0, 1, 3)
+                )                                      # (R, dnum, l_ext, N)
+                em = plan.ext_mods[None, :, None]
+                if self.backend == "pallas":
+                    acc = None
+                    for r in range(n_rot):
+                        a0, a1 = fused_ip_mont(
+                            d_rot[r].astype(jnp.uint32), evk_all[r],
+                            pm_ext_m[r] if with_pt else None,
+                            plan.q32, plan.qneg32, interpret=self.interpret,
+                        )
+                        ipr = jnp.stack([a0, a1]).astype(jnp.uint64)
+                        acc = ipr if acc is None else (acc + ipr) % em
+                else:
+                    prod = (d_rot[:, :, None] * evk_all) % em[None, None]
+                    ip = prod.sum(axis=1) % em[None]   # (R, 2, l_ext, N)
+                    if with_pt:
+                        ip = (ip * pm_ext[:, None]) % em[None]
+                    acc = ip.sum(axis=0) % em
+                bm = plan.base_mods[None, :, None]
+                c0r = jnp.transpose(c0[:, perms], (1, 0, 2))  # (R, l, N)
+                if with_pt:
+                    c0r = (c0r * pm_base) % bm
+                base0 = c0r.sum(axis=0) % plan.base_mods[:, None]
+                d = self._moddown2(acc, plan)
+                return (base0 + d[0]) % plan.base_mods[:, None], d[1]
+
+            self._hoist_fns[key] = jax.jit(fn)
+        return self._hoist_fns[key]
+
+    # ------------------------- public API ------------------------------
+    def keyswitch(self, a, evk: EvalKey, level: int):
+        """ModUp -> IP -> ModDown of poly ``a``: (d0, d1) under Q_level."""
+        return self._ks_fn(level)(a, self.evk_tensor(evk, level))
+
+    def apply_galois(self, c0, c1, galois: int, evk: EvalKey, level: int):
+        """Fused rotate: eval-domain automorphism + keyswitch of c1."""
+        perm = self.perm_tensor([galois])[0]
+        return self._galois_fn(level)(
+            c0, c1, perm, self.evk_tensor(evk, level)
+        )
+
+    def hoisted_rotation_sum(self, c0, c1, galois_list: list[int],
+                             evks: list[EvalKey], level: int,
+                             pm_ext=None, pm_base=None, pm_ext_mont=None):
+        """sum_r [pt_r *] Rot(ct, r): ONE ModUp, ONE (batched) ModDown.
+
+        pm_ext/pm_base: (R, l_ext, N) / (R, l, N) PModUp'd plaintexts
+        (uint64); pm_ext_mont: Montgomery uint32 form (pallas backend,
+        which reads it INSTEAD of pm_ext — pm_ext may then be None).
+        """
+        perms = self.perm_tensor(galois_list)
+        evk_all = self.evk_group_tensor(evks, level)
+        fn = self._hoist_fn(level, len(galois_list), pm_base is not None)
+        return fn(c0, c1, perms, evk_all, pm_ext, pm_base, pm_ext_mont)

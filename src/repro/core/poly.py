@@ -20,11 +20,23 @@ from repro.core.params import CKKSParams
 from repro.core.rns import RNSContext
 
 
-class PolyContext:
-    """jnp-resident tables derived from RNSContext."""
+BACKENDS = ("jnp", "pallas")
 
-    def __init__(self, params: CKKSParams):
+
+class PolyContext:
+    """jnp-resident tables derived from RNSContext.
+
+    ``backend`` selects the numeric implementation of the keyswitch hot
+    path (see ``repro.core.keyswitch``): "jnp" runs batched uint64 jnp
+    ops; "pallas" dispatches NTT/BConv/IP to the uint32 Montgomery
+    Pallas kernels (``interpret=True`` off-TPU).  Both are bit-exact.
+    """
+
+    def __init__(self, params: CKKSParams, backend: str = "jnp"):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.params = params
+        self.backend = backend
         self.rns = RNSContext(params)
         r = self.rns
         self.moduli = jnp.asarray(r.moduli)            # (n_limbs,)
@@ -135,6 +147,14 @@ def bconv(x, src: tuple[int, ...], dst: tuple[int, ...], pc: PolyContext,
 
 # --------------------------- ModUp / ModDown ----------------------------
 
+@lru_cache(maxsize=None)
+def _modup_perm(digit_primes: tuple[int, ...], new_primes: tuple[int, ...],
+                target_primes: tuple[int, ...]) -> np.ndarray:
+    """Row permutation assembling concat([digit, converted]) in target order."""
+    pos = {p: i for i, p in enumerate(digit_primes + new_primes)}
+    return np.array([pos[p] for p in target_primes], dtype=np.int64)
+
+
 def modup_digit(x_digit, digit_primes, target_primes, pc: PolyContext,
                 eval_domain: bool = True):
     """Lift one decomposition digit to the extended basis.
@@ -149,19 +169,8 @@ def modup_digit(x_digit, digit_primes, target_primes, pc: PolyContext,
     converted = bconv(coeff, tuple(digit_primes), new_primes, pc)
     if eval_domain:
         converted = ntt(converted, new_primes, pc)
-        own = x_digit
-    else:
-        own = x_digit
-    # Assemble rows in target order.
-    out_rows = []
-    digit_set = {p: i for i, p in enumerate(digit_primes)}
-    new_set = {p: i for i, p in enumerate(new_primes)}
-    for p in target_primes:
-        if p in digit_set:
-            out_rows.append(own[digit_set[p]])
-        else:
-            out_rows.append(converted[new_set[p]])
-    return jnp.stack(out_rows)
+    perm = _modup_perm(tuple(digit_primes), new_primes, tuple(target_primes))
+    return jnp.concatenate([x_digit, converted])[perm]
 
 
 def moddown(x, level: int, pc: PolyContext, eval_domain: bool = True):
@@ -222,3 +231,13 @@ def automorphism(x, primes: tuple[int, ...], galois: int, pc: PolyContext,
     if eval_domain:
         g = ntt(g, primes, pc)
     return g
+
+
+def automorphism_eval(x, galois: int, pc: PolyContext):
+    """Apply X -> X^galois directly in the eval domain: one gather.
+
+    Bit-exact with ``automorphism(..., eval_domain=True)`` — the NTT's
+    evaluation points are permuted by the Galois element (see
+    ``RNSContext.autom_eval_perm``) — but with no INTT/NTT round trip.
+    """
+    return x[..., jnp.asarray(pc.rns.autom_eval_perm(galois))]

@@ -173,6 +173,21 @@ class RNSContext:
         neg = (i0 >= n).astype(np.uint64)
         return src, neg
 
+    @lru_cache(maxsize=None)
+    def autom_eval_perm(self, galois: int) -> np.ndarray:
+        """Eval-domain automorphism as a pure permutation (no signs).
+
+        The negacyclic NTT evaluates at psi^(2j+1) (natural order), so
+        a(X^g) at point j is a's value at the point with odd exponent
+        g*(2j+1) mod 2N:  out[j] = in[perm[j]].  This is how real FHE
+        libraries apply Galois in the NTT domain — one gather, exactly
+        equal to the coeff-domain INTT -> permute -> NTT round trip.
+        """
+        n = self.params.N
+        two_n = 2 * n
+        j = np.arange(n, dtype=np.int64)
+        return ((galois * (2 * j + 1)) % two_n - 1) // 2
+
     def galois_for_rotation(self, steps: int) -> int:
         """Galois element 5^steps mod 2N rotating slots left by ``steps``."""
         two_n = 2 * self.params.N

@@ -9,7 +9,7 @@ import numpy as np
 from repro.core.rns import RNSContext
 from repro.kernels.bconv.bconv import bconv_pallas
 from repro.kernels.bconv import ref as _ref
-from repro.kernels.modops import qinv_neg_host, to_mont_host
+from repro.kernels.modops import default_interpret, qinv_neg_host, to_mont_host
 
 
 class BConvKernelConsts:
@@ -52,8 +52,10 @@ _RNS_REGISTRY: dict[int, RNSContext] = {}
 
 
 def bconv_kernel(x, src, dst, rns: RNSContext, block: int = 0,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """(ls, N) uint32 -> (ld, N) uint32 via the Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
     _RNS_REGISTRY[id(rns)] = rns
     c = _consts(id(rns), tuple(src), tuple(dst))
     return bconv_pallas(

@@ -6,7 +6,7 @@ import numpy as np
 
 from repro.kernels.fused_ip.fused_ip import fused_ip_pallas
 from repro.kernels.fused_ip import ref as _ref
-from repro.kernels.modops import qinv_neg_host, to_mont_host
+from repro.kernels.modops import default_interpret, qinv_neg_host, to_mont_host
 
 
 def _mont(arr: np.ndarray, q: np.ndarray) -> np.ndarray:
@@ -21,15 +21,28 @@ def _mont(arr: np.ndarray, q: np.ndarray) -> np.ndarray:
     return out
 
 
-def fused_ip_kernel(digits, evk, pt, q, interpret: bool = True):
+def fused_ip_mont(digits, evk_mont, pt_mont, q, qneg,
+                  interpret: bool | None = None):
+    """Deployment-shaped entry: evk/pt are ALREADY Montgomery uint32
+    (stored pre-converted, e.g. by the keyswitch engine's per-context
+    cache); digits stay normal-form.  q/qneg: (l, 1) uint32."""
+    if interpret is None:
+        interpret = default_interpret()
+    return fused_ip_pallas(
+        digits, evk_mont, pt_mont, q, qneg, interpret=interpret,
+    )
+
+
+def fused_ip_kernel(digits, evk, pt, q, interpret: bool | None = None):
     """NORMAL-form inputs; conversion to Montgomery happens here (in a
-    real deployment evk/pt are stored pre-converted)."""
+    real deployment evk/pt are stored pre-converted — see
+    ``fused_ip_mont``)."""
     qv = np.asarray(q, dtype=np.uint32)
     l = qv.shape[0]
     evk_m = _mont(np.asarray(evk), qv)
     pt_m = _mont(np.asarray(pt)[None], qv)[0] if pt is not None else None
     qneg = np.array([qinv_neg_host(int(x)) for x in qv], dtype=np.uint32)
-    return fused_ip_pallas(
+    return fused_ip_mont(
         jnp.asarray(np.asarray(digits, dtype=np.uint32)),
         jnp.asarray(evk_m),
         jnp.asarray(pt_m) if pt_m is not None else None,

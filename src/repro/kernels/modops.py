@@ -67,6 +67,13 @@ def sub_mod(a, b, q):
 
 # ----------------------- host-side constant helpers ----------------------
 
+def default_interpret() -> bool:
+    """Pallas interpret mode unless a real TPU backend is attached."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
 def qinv_neg_host(q: int) -> np.uint32:
     """-q^{-1} mod 2^32 (host precompute)."""
     return np.uint32((-pow(q, -1, 1 << 32)) % (1 << 32))

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rns import RNSContext
-from repro.kernels.modops import qinv_neg_host, to_mont_host
+from repro.kernels.modops import default_interpret, qinv_neg_host, to_mont_host
 from repro.kernels.ntt.ntt import ntt_pallas
 from repro.kernels.ntt import ref as _ref
 
@@ -70,8 +70,15 @@ def tables_for(params) -> NTTKernelTables:
     return NTTKernelTables(RNSContext(params))
 
 
-def ntt_fwd(x, primes, tables: NTTKernelTables, interpret: bool = True):
-    """(l, N) uint32 natural coeffs -> bit-reversed eval order."""
+def ntt_fwd(x, primes, tables: NTTKernelTables,
+            interpret: bool | None = None):
+    """(l, N) uint32 natural coeffs -> bit-reversed eval order.
+
+    ``primes`` may contain duplicates (batched multi-poly transforms
+    tile the limb axis).  ``interpret=None`` auto-detects the backend.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     r = tables.rows(tuple(primes))
     return ntt_pallas(
         x.astype(jnp.uint32),
@@ -83,7 +90,10 @@ def ntt_fwd(x, primes, tables: NTTKernelTables, interpret: bool = True):
     )
 
 
-def ntt_inv(x, primes, tables: NTTKernelTables, interpret: bool = True):
+def ntt_inv(x, primes, tables: NTTKernelTables,
+            interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
     r = tables.rows(tuple(primes))
     return ntt_pallas(
         x.astype(jnp.uint32),

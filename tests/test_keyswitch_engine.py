@@ -1,0 +1,196 @@
+"""Batched jit keyswitch engine: backend parity with the seed per-digit
+path (bit-exact ciphertexts), jit plan caching, and PModUp caching."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.ckks import CKKSContext
+from repro.core.params import CKKSParams
+
+
+def _ct_equal(a, b):
+    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
+            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+
+
+def _seeded(ctx, fn):
+    """Run ``fn`` on the seed per-digit path of the same context (same
+    keys), restoring the engine afterwards."""
+    ctx.use_engine = False
+    try:
+        return fn()
+    finally:
+        ctx.use_engine = True
+
+
+@pytest.fixture(scope="module")
+def ectx():
+    params = CKKSParams(logN=9, L=5, alpha=2, k=3, q_bits=29, scale_bits=29)
+    return CKKSContext(params, seed=11)
+
+
+@pytest.fixture(scope="module")
+def enc(ectx):
+    rng = np.random.default_rng(3)
+    nh = ectx.params.num_slots
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    return z, ectx.encrypt(z), rng
+
+
+# --------------------- jnp engine vs seed path ---------------------------
+
+def test_multiply_parity(ectx, enc):
+    z, ct, _ = enc
+    got = ectx.multiply(ct, ct)
+    exp = _seeded(ectx, lambda: ectx.multiply(ct, ct))
+    assert _ct_equal(got, exp)
+    assert np.abs(ectx.decrypt(got) - z * z).max() < 1e-3
+
+
+@pytest.mark.parametrize("steps", [1, 7, 100])
+def test_rotate_parity(ectx, enc, steps):
+    z, ct, _ = enc
+    got = ectx.rotate(ct, steps)
+    exp = _seeded(ectx, lambda: ectx.rotate(ct, steps))
+    assert _ct_equal(got, exp)
+    assert np.abs(ectx.decrypt(got) - np.roll(z, -steps)).max() < 1e-3
+
+
+def test_conjugate_parity(ectx, enc):
+    _, ct, _ = enc
+    assert _ct_equal(
+        ectx.conjugate(ct), _seeded(ectx, lambda: ectx.conjugate(ct))
+    )
+
+
+def test_hoisted_rotation_sum_parity(ectx, enc):
+    z, ct, rng = enc
+    steps = [1, 5, 17]
+    got = ectx.hoisted_rotation_sum(ct, steps, None)
+    exp = _seeded(ectx, lambda: ectx.hoisted_rotation_sum(ct, steps, None))
+    assert _ct_equal(got, exp)
+    assert np.abs(
+        ectx.decrypt(got) - sum(np.roll(z, -s) for s in steps)
+    ).max() < 2e-3
+
+
+def test_hoisted_rotation_sum_pt_parity(ectx, enc):
+    z, ct, rng = enc
+    nh = ectx.params.num_slots
+    steps = [2, 9, 11, 30]
+    ptvals = [rng.normal(size=nh) for _ in steps]
+    pts = [ectx.encode(v) for v in ptvals]
+    got = ectx.hoisted_rotation_sum(ct, steps, pts)
+    exp = _seeded(ectx, lambda: ectx.hoisted_rotation_sum(ct, steps, pts))
+    assert _ct_equal(got, exp)
+    expected = sum(np.roll(z, -s) * v for s, v in zip(steps, ptvals))
+    assert np.abs(ectx.decrypt(got) - expected).max() < 2e-3
+
+
+def test_keyswitch_parity_at_lower_level(ectx, enc):
+    """Level-independent gadget: engine matches seed after level drops."""
+    z, ct, _ = enc
+    nh = ectx.params.num_slots
+    low = ectx.pt_mul(ct, ectx.encode(np.ones(nh)))
+    got = ectx.rotate(low, 4)
+    exp = _seeded(ectx, lambda: ectx.rotate(low, 4))
+    assert _ct_equal(got, exp)
+    assert np.abs(ectx.decrypt(got) - np.roll(z, -4)).max() < 5e-3
+
+
+@pytest.mark.parametrize("steps", [1, 6])
+def test_automorphism_eval_matches_coeff_roundtrip(ectx, enc, steps):
+    """Eval-domain Galois gather == INTT -> permute -> NTT, bit-exact."""
+    from repro.core import poly
+
+    _, ct, _ = enc
+    primes = ectx.chain(ct.level)
+    g = ectx.pc.rns.galois_for_rotation(steps)
+    got = poly.automorphism_eval(ct.c1, g, ectx.pc)
+    exp = poly.automorphism(ct.c1, primes, g, ectx.pc)
+    assert np.array_equal(np.asarray(got), np.asarray(exp))
+
+
+# --------------------- pallas backend parity -----------------------------
+
+@pytest.fixture(scope="module")
+def pallas_pair():
+    params = CKKSParams(logN=8, L=3, alpha=2, k=2, q_bits=29, scale_bits=26)
+    return (CKKSContext(params, seed=5),
+            CKKSContext(params, seed=5, backend="pallas"))
+
+
+def test_pallas_backend_parity(pallas_pair):
+    """Montgomery uint32 kernel path decrypt-matches the uint64 jnp
+    engine bit-exactly for multiply / rotate / hoisted-rotation-sum."""
+    ctx_j, ctx_p = pallas_pair
+    rng = np.random.default_rng(9)
+    nh = ctx_j.params.num_slots
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    ct_j, ct_p = ctx_j.encrypt(z), ctx_p.encrypt(z)
+    assert np.array_equal(np.asarray(ct_j.c0), np.asarray(ct_p.c0))
+
+    assert _ct_equal(ctx_j.multiply(ct_j, ct_j), ctx_p.multiply(ct_p, ct_p))
+    assert _ct_equal(ctx_j.rotate(ct_j, 5), ctx_p.rotate(ct_p, 5))
+    ptvals = [rng.normal(size=nh) for _ in range(2)]
+    h_j = ctx_j.hoisted_rotation_sum(
+        ct_j, [1, 5], [ctx_j.encode(v) for v in ptvals]
+    )
+    h_p = ctx_p.hoisted_rotation_sum(
+        ct_p, [1, 5], [ctx_p.encode(v) for v in ptvals]
+    )
+    assert _ct_equal(h_j, h_p)
+    expected = sum(np.roll(z, -s) * v for s, v in zip([1, 5], ptvals))
+    assert np.abs(ctx_p.decrypt(h_p) - expected).max() < 2e-2
+
+
+def test_pallas_backend_seed_parity(pallas_pair):
+    """Pallas engine also decrypt-matches the seed per-digit path."""
+    ctx_j, ctx_p = pallas_pair
+    rng = np.random.default_rng(13)
+    nh = ctx_j.params.num_slots
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    ct_p = ctx_p.encrypt(z)
+    got = ctx_p.hoisted_rotation_sum(ct_p, [2, 9], None)
+    exp = _seeded(
+        ctx_p, lambda: ctx_p.hoisted_rotation_sum(ct_p, [2, 9], None)
+    )
+    assert _ct_equal(got, exp)
+
+
+def test_bad_backend_rejected():
+    with pytest.raises(ValueError):
+        CKKSContext(
+            CKKSParams(logN=8, L=1, alpha=1, k=1), backend="cuda"
+        )
+
+
+# --------------------- jit plan caching ----------------------------------
+
+def test_jit_one_trace_per_level(ectx, enc):
+    """Re-dispatch at the same level never retraces: one trace per
+    (level, op-shape) plan."""
+    _, ct, _ = enc
+    lvl = ct.level
+    eng = ectx.engine
+    ectx.multiply(ct, ct)
+    ectx.multiply(ct, ct)
+    assert eng.trace_counts[("keyswitch", lvl)] == 1
+    ectx.rotate(ct, 1)
+    ectx.rotate(ct, 9)     # different step, same plan
+    ectx.conjugate(ct)     # different galois, same plan
+    assert eng.trace_counts[("galois", lvl)] == 1
+    ectx.hoisted_rotation_sum(ct, [1, 2], None)
+    ectx.hoisted_rotation_sum(ct, [3, 8], None)  # same R -> cache hit
+    assert eng.trace_counts[("hoisted", lvl, 2, False)] == 1
+
+
+def test_pmodup_cached(ectx, enc):
+    _, ct, rng = enc
+    nh = ectx.params.num_slots
+    pt = ectx.encode(rng.normal(size=nh))
+    a = ectx._pmodup(pt, ct.level)
+    b = ectx._pmodup(pt, ct.level)
+    assert a is b
+    assert isinstance(a, jnp.ndarray)
