@@ -1,0 +1,143 @@
+"""Compiled-runtime benchmark: eager per-ct loops vs the DFG-compiled
+executor (``repro.runtime``) on a BSGS matvec workload.
+
+Four configurations, same program and same answers:
+
+  eager      — ``linear.matvec_bsgs`` per ciphertext (per-call plaintext
+               encoding, one ModUp per hoisted block + per giant rotate)
+  compiled   — traced + lowered, per-ct execution: plaintexts encoded
+               once, ONE ModUp shared across all baby-step blocks
+  batched    — the same compiled plan over all ciphertexts at once via
+               ``jax.vmap`` over the ct axis (one jit trace per plan)
+  fused      — HERO fusion DP applied before lowering: the whole BSGS
+               collapses into a single hoisted block (1 ModUp total)
+
+Writes BENCH_runtime.json and ENFORCES the regression gate: compiled +
+batched execution must beat the eager per-ct loop by >= 2x on the smoke
+shape (measured steady-state, after one warmup run that absorbs jit
+tracing and plaintext encoding).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+# Perf regression gate (CI): compiled+batched vs eager per-ct loop.
+GATE_BATCHED_SPEEDUP = 2.0
+
+
+def _params(logn: int):
+    from repro.core.params import CKKSParams
+
+    return CKKSParams(logN=logn, L=5, alpha=2, k=3, q_bits=29,
+                      scale_bits=29)
+
+
+def _time(fn, reps: int) -> float:
+    """us/run after one warmup (jit traces + plaintext caches)."""
+    out = fn()
+    (out[0].c0 if isinstance(out, list) else out.c0).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    (out[0].c0 if isinstance(out, list) else out.c0).block_until_ready()
+    return (time.perf_counter() - t0) * 1e6 / reps
+
+
+def run() -> list[str]:
+    from repro.core import linear
+    from repro.core.ckks import CKKSContext
+    from repro.runtime import (
+        ProgramExecutor, TraceContext, compile_program,
+    )
+
+    RESULTS.mkdir(exist_ok=True)
+    logn = 9 if common.SMOKE else 11
+    n_diag = 8 if common.SMOKE else 16
+    bs = 4
+    batch = 4 if common.SMOKE else 8
+    reps = 2 if common.SMOKE else 3
+
+    params = _params(logn)
+    ctx = CKKSContext(params, seed=3)
+    nh = params.num_slots
+    rng = np.random.default_rng(0)
+    diags = {d: rng.normal(size=nh) for d in range(n_diag)}
+    zs = [rng.normal(size=nh) + 1j * rng.normal(size=nh)
+          for _ in range(batch)]
+    cts = [ctx.encrypt(z) for z in zs]
+
+    tc = TraceContext(params)
+    h = tc.input("x", level=params.L, scale=params.scale)
+    tc.output(linear.matvec_bsgs(tc, h, diags, bs=bs), "y")
+    comp = compile_program(tc)
+    comp_fused = compile_program(tc, fusion=True)
+    ex = ProgramExecutor(ctx)
+
+    def count_modups(fn):
+        before = ctx.counters.snapshot()
+        fn()
+        return ctx.counters.delta(before).modup
+
+    modups = {
+        "eager": count_modups(
+            lambda: linear.matvec_bsgs(ctx, cts[0], diags, bs=bs)),
+        "compiled": count_modups(lambda: ex.run(comp, {"x": cts[0]})),
+        "fused": count_modups(lambda: ex.run(comp_fused, {"x": cts[0]})),
+    }
+
+    t = {
+        "eager_loop": _time(
+            lambda: [linear.matvec_bsgs(ctx, c, diags, bs=bs)
+                     for c in cts][-1], reps),
+        "compiled_loop": _time(
+            lambda: [ex.run(comp, {"x": c})["y"] for c in cts][-1], reps),
+        "compiled_batched": _time(
+            lambda: ex.run_batched(comp, {"x": cts})["y"], reps),
+        "fused_batched": _time(
+            lambda: ex.run_batched(comp_fused, {"x": cts})["y"], reps),
+    }
+    speedup = {k: t["eager_loop"] / v for k, v in t.items()}
+
+    batched_x = speedup["compiled_batched"]
+    summary = {
+        "params": {"logN": logn, "L": 5, "alpha": 2, "diags": n_diag,
+                   "bs": bs, "batch": batch},
+        "lowering": {"unfused": comp.summary(),
+                     "fused": comp_fused.summary()},
+        "modups_per_ct": modups,
+        "us_per_batch": t,
+        "speedup_vs_eager_loop": speedup,
+        "gate": {"batched_min_speedup": GATE_BATCHED_SPEEDUP,
+                 "batched_speedup": batched_x,
+                 "passed": batched_x >= GATE_BATCHED_SPEEDUP},
+    }
+    (RESULTS / "BENCH_runtime.json").write_text(json.dumps(summary, indent=2))
+
+    lines = [
+        f"runtime/{k},{v:.0f},speedup={speedup[k]:.2f}x"
+        for k, v in t.items()
+    ]
+    lines.append(
+        f"runtime/modups,{modups['eager']},compiled={modups['compiled']};"
+        f"fused={modups['fused']}"
+    )
+    if not (modups["fused"] < modups["compiled"] < modups["eager"]):
+        raise RuntimeError(
+            f"runtime ModUp gate FAILED: expected fused < compiled < "
+            f"eager, got {modups}"
+        )
+    if batched_x < GATE_BATCHED_SPEEDUP:
+        raise RuntimeError(
+            f"runtime perf gate FAILED: compiled+batched "
+            f"{batched_x:.2f}x < {GATE_BATCHED_SPEEDUP}x vs eager per-ct "
+            f"loop"
+        )
+    return lines

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import poly
+from repro.core.counters import OpCounters
 from repro.core.encoding import Encoder
 from repro.core.keys import EvalKey, KeyChain, sample_gaussian, to_rns
 from repro.core.keyswitch import (
@@ -60,7 +61,11 @@ class CKKSContext:
             params, self.pc, seed=seed, hamming_weight=hamming_weight
         )
         self.rng = np.random.default_rng(seed + 1)
-        self.engine = KeyswitchEngine(self.pc)
+        # Op counters (keyswitch/modup/moddown/ip/rotation invocations),
+        # shared with the engine so both dispatch paths tally into one
+        # place; runtime reports and fusion tests read the deltas.
+        self.counters = OpCounters()
+        self.engine = KeyswitchEngine(self.pc, counters=self.counters)
         self.use_engine = use_engine
         # (pt ids, level) -> (pts, pm_ext, pm_base, pm_ext_mont); the pts
         # tuple pins the objects so ids cannot be reused.  Bounded (FIFO
@@ -198,9 +203,23 @@ class CKKSContext:
             acc1 = t1 if acc1 is None else poly.add(acc1, t1, mods)
         return acc0, acc1
 
+    def _note_seed_ks(self, level: int, n_ip: int = 1,
+                      modups: int = 1) -> None:
+        """Seed-path analogue of the engine's dispatch-time counting."""
+        c = self.counters
+        groups = tuple(len(D) for D in self.params.digit_groups(level))
+        l, ext = level + 1, level + 1 + self.params.k
+        N = self.params.N
+        for _ in range(modups):
+            c.note_modup(l, ext, groups, N)
+        c.note_ip(len(groups), ext, N, n_ip)
+        c.note_moddown(l, self.params.k, N)
+        c.keyswitch += n_ip
+
     def keyswitch_seed(self, a: jnp.ndarray, evk: EvalKey,
                        level: int) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Seed per-digit keyswitch: ModUp -> IP -> ModDown loops."""
+        self._note_seed_ks(level)
         digits = self.modup_digits(a, level)
         acc0, acc1 = self.inner_product(digits, evk, level)
         d0 = poly.moddown(acc0, level, self.pc)
@@ -235,6 +254,16 @@ class CKKSContext:
     def square(self, a: Ciphertext, rescale: bool = True) -> Ciphertext:
         return self.multiply(a, a, rescale=rescale)
 
+    def double(self, ct: Ciphertext) -> Ciphertext:
+        """2*ct without scale change (cheap: residues doubled mod q)."""
+        mods = self.pc.mods(self.chain(ct.level))
+        two = (mods * 0 + 2).astype(mods.dtype)
+        return Ciphertext(
+            poly.mul_scalar(ct.c0, two, mods),
+            poly.mul_scalar(ct.c1, two, mods),
+            ct.level, ct.scale,
+        )
+
     def _apply_galois(self, ct: Ciphertext, galois: int,
                       evk: EvalKey) -> Ciphertext:
         lvl = ct.level
@@ -243,6 +272,7 @@ class CKKSContext:
             return Ciphertext(c0, c1, lvl, ct.scale)
         primes = self.chain(lvl)
         mods = self.pc.mods(primes)
+        self.counters.rotation += 1
         c0r = poly.automorphism(ct.c0, primes, galois, self.pc)
         c1r = poly.automorphism(ct.c1, primes, galois, self.pc)
         d0, d1 = self.keyswitch_seed(c1r, evk, lvl)
@@ -262,16 +292,30 @@ class CKKSContext:
         return self._apply_galois(ct, g, self.keys.conj_key)
 
     # ------------------------- hoisted rotations -----------------------
+    def hoist_digits(self, ct: Ciphertext) -> jnp.ndarray | None:
+        """ModUp of ct.c1 for reuse across hoisted blocks (engine only).
+
+        The compiled runtime (``repro.runtime``) calls this once per
+        anchor ciphertext and feeds the digits to every hoisted block it
+        anchors — cross-block double hoisting.  Returns None on the seed
+        path (which has no digits-in entry point)."""
+        if not self.use_engine:
+            return None
+        return self.engine.modup(ct.c1, ct.level)
+
     def hoisted_rotation_sum(
         self, ct: Ciphertext, steps_list: list[int],
         pts: list[Plaintext] | None = None, rescale: bool = True,
+        digits: jnp.ndarray | None = None,
     ) -> Ciphertext:
         """sum_r pt_r * Rot(ct, r) with ONE ModUp and ONE ModDown.
 
         This is the hoisting primitive of Fig. 2(c): the ModUp of c1 is
         shared across all rotations; per-rotation IP results (and PModUp'd
         plaintext muls — Eq. (1)) are accumulated in the extended basis;
-        a single ModDown closes the block.
+        a single ModDown closes the block.  ``digits`` (from
+        :meth:`hoist_digits`) skips even that ModUp — blocks sharing an
+        anchor ciphertext share one ModUp program-wide.
         """
         lvl = ct.level
         steps_norm = [s % self.params.num_slots for s in steps_list]
@@ -283,13 +327,15 @@ class CKKSContext:
                 assert all(pt.level == lvl for pt in pts)
                 pm_ext, pm_base, pm_ext_m = self._pm_stack(tuple(pts), lvl)
             c0, c1 = self.engine.hoisted_rotation_sum(
-                ct.c0, ct.c1, gs, keys, lvl, pm_ext, pm_base, pm_ext_m
+                ct.c0, ct.c1, gs, keys, lvl, pm_ext, pm_base, pm_ext_m,
+                digits=digits,
             )
             out_scale = ct.scale * (pts[0].scale if pts is not None else 1.0)
             out = Ciphertext(c0, c1, lvl, out_scale)
             if pts is not None and rescale:
                 out = self.rescale(out)
             return out
+        assert digits is None, "digits sharing requires the engine path"
         return self._hoisted_rotation_sum_seed(ct, steps_norm, pts, rescale)
 
     def _hoisted_rotation_sum_seed(
@@ -298,6 +344,9 @@ class CKKSContext:
     ) -> Ciphertext:
         """Seed path: per-rotation automorphism/IP loops (reference)."""
         lvl = ct.level
+        self._note_seed_ks(lvl, n_ip=len(steps_list))
+        self.counters.rotation += len(steps_list)
+        self.counters.hoisted_blocks += 1
         base = self.chain(lvl)
         ext = self.ext_basis(lvl)
         base_mods = self.pc.mods(base)

@@ -21,6 +21,14 @@ path with one traced program per ``(level, dnum)`` plan:
 Every plan traces once under ``jax.jit`` and is cached; re-dispatch at
 the same level is a cache hit (``trace_counts`` records trace events).
 
+The compiled runtime (``repro.runtime``) drives three extensions of the
+same plans: ``modup``/``digits=`` split the hoisted entry point so one
+ModUp feeds every block anchored on the same ciphertext, the
+``*_batched`` entry points ``jax.vmap`` a whole batch of independent
+ciphertexts through one trace (jnp backend), and every dispatch tallies
+``OpCounters`` so reports can reconcile executed ModUp/ModDown/IP
+counts against ``dfg.hoist`` predictions.
+
 Backends (``PolyContext.backend``):
   * ``"jnp"``    — exact uint64 ``(a * b) % q`` ops, batched as above.
   * ``"pallas"`` — NTT/BConv/IP dispatch to the uint32 Montgomery
@@ -42,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import poly
+from repro.core.counters import OpCounters
 from repro.kernels.bconv.ops import bconv_kernel
 from repro.kernels.fused_ip.ops import fused_ip_mont
 from repro.kernels.modops import default_interpret, qinv_neg_host
@@ -87,6 +96,7 @@ class KeyswitchPlan:
         self.groups = params.digit_groups(level)
         self.dnum = len(self.groups)
         self.alpha = max(len(D) for D in self.groups)
+        self.group_sizes = tuple(len(D) for D in self.groups)
         self.l = len(self.base)
         self.l_ext = len(self.ext)
         self.k = len(params.p_primes)
@@ -152,21 +162,44 @@ class KeyswitchEngine:
     pallas backend, Montgomery-converted) once per key and cached.
     """
 
-    def __init__(self, pc: poly.PolyContext):
+    def __init__(self, pc: poly.PolyContext,
+                 counters: OpCounters | None = None):
         self.pc = pc
         self.params = pc.params
         self.backend = pc.backend
         self.interpret = default_interpret()
         self.tabs = tables_for(pc.params) if self.backend == "pallas" else None
+        self.counters = counters if counters is not None else OpCounters()
         self._plans: dict[int, KeyswitchPlan] = {}
         self._ks_fns: dict[int, object] = {}
         self._galois_fns: dict[int, object] = {}
         self._hoist_fns: dict[tuple, object] = {}
+        self._modup_fns: dict[int, object] = {}
+        self._batch_fns: dict[tuple, object] = {}
         self._evk_full: dict[int, tuple] = {}     # id(evk) -> (evk, stacked)
         self._evk_level: dict[tuple, jnp.ndarray] = {}
         self._evk_group: dict[tuple, jnp.ndarray] = {}
         self._perm_cache: dict[tuple, jnp.ndarray] = {}
         self.trace_counts: dict[tuple, int] = {}
+
+    # ------------------------- op counting -----------------------------
+    def _note_keyswitch(self, plan: KeyswitchPlan, m: int = 1) -> None:
+        c = self.counters
+        c.note_modup(plan.l, plan.l_ext, plan.group_sizes, plan.N, m)
+        c.note_ip(plan.dnum, plan.l_ext, plan.N, 1, m)
+        c.note_moddown(plan.l, plan.k, plan.N, m)
+        c.keyswitch += m
+
+    def _note_hoisted(self, plan: KeyswitchPlan, n_rot: int,
+                      with_modup: bool, m: int = 1) -> None:
+        c = self.counters
+        if with_modup:
+            c.note_modup(plan.l, plan.l_ext, plan.group_sizes, plan.N, m)
+        c.note_ip(plan.dnum, plan.l_ext, plan.N, n_rot, m)
+        c.note_moddown(plan.l, plan.k, plan.N, m)
+        c.keyswitch += m * n_rot
+        c.rotation += m * n_rot
+        c.hoisted_blocks += m
 
     # ------------------------- plans / tracing -------------------------
     def _plan(self, level: int) -> KeyswitchPlan:
@@ -344,6 +377,40 @@ class KeyswitchEngine:
             self._galois_fns[level] = jax.jit(fn)
         return self._galois_fns[level]
 
+    def _hoist_core(self, plan: KeyswitchPlan, n_rot: int, with_pt: bool,
+                    c0, digits, perms, evk_all, pm_ext, pm_base, pm_ext_m):
+        """Hoisted-rotation-sum body AFTER ModUp: rotate digits, IP,
+        accumulate, one batched ModDown.  Shared by the monolithic,
+        digits-in and vmap-batched entry points (bit-exact across all)."""
+        # One gather rotates ALL digits for ALL rotations.
+        d_rot = jnp.transpose(
+            digits[:, :, perms], (2, 0, 1, 3)
+        )                                      # (R, dnum, l_ext, N)
+        em = plan.ext_mods[None, :, None]
+        if self.backend == "pallas":
+            acc = None
+            for r in range(n_rot):
+                a0, a1 = fused_ip_mont(
+                    d_rot[r].astype(jnp.uint32), evk_all[r],
+                    pm_ext_m[r] if with_pt else None,
+                    plan.q32, plan.qneg32, interpret=self.interpret,
+                )
+                ipr = jnp.stack([a0, a1]).astype(jnp.uint64)
+                acc = ipr if acc is None else (acc + ipr) % em
+        else:
+            prod = (d_rot[:, :, None] * evk_all) % em[None, None]
+            ip = prod.sum(axis=1) % em[None]   # (R, 2, l_ext, N)
+            if with_pt:
+                ip = (ip * pm_ext[:, None]) % em[None]
+            acc = ip.sum(axis=0) % em
+        bm = plan.base_mods[None, :, None]
+        c0r = jnp.transpose(c0[:, perms], (1, 0, 2))  # (R, l, N)
+        if with_pt:
+            c0r = (c0r * pm_base) % bm
+        base0 = c0r.sum(axis=0) % plan.base_mods[:, None]
+        d = self._moddown2(acc, plan)
+        return (base0 + d[0]) % plan.base_mods[:, None], d[1]
+
     def _hoist_fn(self, level: int, n_rot: int, with_pt: bool):
         key = (level, n_rot, with_pt)
         if key not in self._hoist_fns:
@@ -352,60 +419,216 @@ class KeyswitchEngine:
             def fn(c0, c1, perms, evk_all, pm_ext, pm_base, pm_ext_m):
                 self._count_trace(("hoisted", level, n_rot, with_pt))
                 digits = self._modup(c1, plan)
-                # One gather rotates ALL digits for ALL rotations.
-                d_rot = jnp.transpose(
-                    digits[:, :, perms], (2, 0, 1, 3)
-                )                                      # (R, dnum, l_ext, N)
-                em = plan.ext_mods[None, :, None]
-                if self.backend == "pallas":
-                    acc = None
-                    for r in range(n_rot):
-                        a0, a1 = fused_ip_mont(
-                            d_rot[r].astype(jnp.uint32), evk_all[r],
-                            pm_ext_m[r] if with_pt else None,
-                            plan.q32, plan.qneg32, interpret=self.interpret,
-                        )
-                        ipr = jnp.stack([a0, a1]).astype(jnp.uint64)
-                        acc = ipr if acc is None else (acc + ipr) % em
-                else:
-                    prod = (d_rot[:, :, None] * evk_all) % em[None, None]
-                    ip = prod.sum(axis=1) % em[None]   # (R, 2, l_ext, N)
-                    if with_pt:
-                        ip = (ip * pm_ext[:, None]) % em[None]
-                    acc = ip.sum(axis=0) % em
-                bm = plan.base_mods[None, :, None]
-                c0r = jnp.transpose(c0[:, perms], (1, 0, 2))  # (R, l, N)
-                if with_pt:
-                    c0r = (c0r * pm_base) % bm
-                base0 = c0r.sum(axis=0) % plan.base_mods[:, None]
-                d = self._moddown2(acc, plan)
-                return (base0 + d[0]) % plan.base_mods[:, None], d[1]
+                return self._hoist_core(plan, n_rot, with_pt, c0, digits,
+                                        perms, evk_all, pm_ext, pm_base,
+                                        pm_ext_m)
 
             self._hoist_fns[key] = jax.jit(fn)
         return self._hoist_fns[key]
 
+    def _hoist_digits_fn(self, level: int, n_rot: int, with_pt: bool):
+        """Hoisted sum from PRE-COMPUTED digits — the runtime shares one
+        ModUp across sibling blocks anchored on the same ciphertext."""
+        key = ("digits", level, n_rot, with_pt)
+        if key not in self._hoist_fns:
+            plan = self._plan(level)
+
+            def fn(c0, digits, perms, evk_all, pm_ext, pm_base, pm_ext_m):
+                self._count_trace(("hoisted_digits", level, n_rot, with_pt))
+                return self._hoist_core(plan, n_rot, with_pt, c0, digits,
+                                        perms, evk_all, pm_ext, pm_base,
+                                        pm_ext_m)
+
+            self._hoist_fns[key] = jax.jit(fn)
+        return self._hoist_fns[key]
+
+    def _modup_fn(self, level: int):
+        if level not in self._modup_fns:
+            plan = self._plan(level)
+
+            def fn(a):
+                self._count_trace(("modup", level))
+                return self._modup(a, plan)
+
+            self._modup_fns[level] = jax.jit(fn)
+        return self._modup_fns[level]
+
+    # ------------------------- batched (vmap) fns ----------------------
+    def _batched_fn(self, key: tuple, make):
+        """jit(vmap) plan cache: one trace per (op, level, shape) plan —
+        re-dispatch at the same batch shape is a cache hit (asserted by
+        ``trace_counts``, which only increments while tracing)."""
+        if key not in self._batch_fns:
+            self._batch_fns[key] = jax.jit(make())
+        return self._batch_fns[key]
+
+    def _require_jnp(self, what: str) -> None:
+        if self.backend != "jnp":
+            raise NotImplementedError(
+                f"{what} batching requires backend='jnp' (the Pallas "
+                f"kernels are not vmap-compatible yet)"
+            )
+
+    def _ks_batched_fn(self, level: int):
+        plan = self._plan(level)
+
+        def make():
+            def fn(ab, evk):
+                self._count_trace(("keyswitch_b", level))
+
+                def one(a):
+                    digits = self._modup(a, plan)
+                    d = self._moddown2(self._ip(digits, evk, plan), plan)
+                    return d[0], d[1]
+
+                return jax.vmap(one)(ab)
+
+            return fn
+
+        return self._batched_fn(("keyswitch_b", level), make)
+
+    def _galois_batched_fn(self, level: int):
+        plan = self._plan(level)
+
+        def make():
+            def fn(c0b, c1b, perm, evk):
+                self._count_trace(("galois_b", level))
+                bm = plan.base_mods[:, None]
+
+                def one(c0, c1):
+                    digits = self._modup(c1[:, perm], plan)
+                    d = self._moddown2(self._ip(digits, evk, plan), plan)
+                    return (c0[:, perm] + d[0]) % bm, d[1]
+
+                return jax.vmap(one)(c0b, c1b)
+
+            return fn
+
+        return self._batched_fn(("galois_b", level), make)
+
+    def _hoist_batched_fn(self, level: int, n_rot: int, with_pt: bool,
+                          digits_in: bool):
+        plan = self._plan(level)
+
+        def make():
+            def fn(c0b, xb, perms, evk_all, pm_ext, pm_base, pm_ext_m):
+                self._count_trace(
+                    ("hoisted_b", level, n_rot, with_pt, digits_in))
+
+                def one(c0, x):
+                    digits = x if digits_in else self._modup(x, plan)
+                    return self._hoist_core(
+                        plan, n_rot, with_pt, c0, digits, perms, evk_all,
+                        pm_ext, pm_base, pm_ext_m,
+                    )
+
+                return jax.vmap(one)(c0b, xb)
+
+            return fn
+
+        return self._batched_fn(
+            ("hoisted_b", level, n_rot, with_pt, digits_in), make)
+
+    def _modup_batched_fn(self, level: int):
+        plan = self._plan(level)
+
+        def make():
+            def fn(ab):
+                self._count_trace(("modup_b", level))
+                return jax.vmap(lambda a: self._modup(a, plan))(ab)
+
+            return fn
+
+        return self._batched_fn(("modup_b", level), make)
+
     # ------------------------- public API ------------------------------
     def keyswitch(self, a, evk: EvalKey, level: int):
         """ModUp -> IP -> ModDown of poly ``a``: (d0, d1) under Q_level."""
+        self._note_keyswitch(self._plan(level))
         return self._ks_fn(level)(a, self.evk_tensor(evk, level))
 
     def apply_galois(self, c0, c1, galois: int, evk: EvalKey, level: int):
         """Fused rotate: eval-domain automorphism + keyswitch of c1."""
+        self._note_keyswitch(self._plan(level))
+        self.counters.rotation += 1
         perm = self.perm_tensor([galois])[0]
         return self._galois_fn(level)(
             c0, c1, perm, self.evk_tensor(evk, level)
         )
 
+    def modup(self, a, level: int):
+        """Standalone ModUp of poly ``a`` -> (dnum, l_ext, N) digits.
+
+        The runtime executor shares the result across all hoisted blocks
+        anchored on the same ciphertext (cross-block double hoisting)."""
+        plan = self._plan(level)
+        self.counters.note_modup(plan.l, plan.l_ext, plan.group_sizes,
+                                 plan.N)
+        return self._modup_fn(level)(a)
+
     def hoisted_rotation_sum(self, c0, c1, galois_list: list[int],
                              evks: list[EvalKey], level: int,
-                             pm_ext=None, pm_base=None, pm_ext_mont=None):
+                             pm_ext=None, pm_base=None, pm_ext_mont=None,
+                             digits=None):
         """sum_r [pt_r *] Rot(ct, r): ONE ModUp, ONE (batched) ModDown.
 
         pm_ext/pm_base: (R, l_ext, N) / (R, l, N) PModUp'd plaintexts
         (uint64); pm_ext_mont: Montgomery uint32 form (pallas backend,
         which reads it INSTEAD of pm_ext — pm_ext may then be None).
+        ``digits``: pre-computed ModUp digits from :meth:`modup` — the
+        internal ModUp is skipped (bit-exact with the monolithic path).
         """
+        plan = self._plan(level)
+        self._note_hoisted(plan, len(galois_list), digits is None)
         perms = self.perm_tensor(galois_list)
         evk_all = self.evk_group_tensor(evks, level)
-        fn = self._hoist_fn(level, len(galois_list), pm_base is not None)
+        with_pt = pm_base is not None
+        if digits is not None:
+            fn = self._hoist_digits_fn(level, len(galois_list), with_pt)
+            return fn(c0, digits, perms, evk_all, pm_ext, pm_base,
+                      pm_ext_mont)
+        fn = self._hoist_fn(level, len(galois_list), with_pt)
         return fn(c0, c1, perms, evk_all, pm_ext, pm_base, pm_ext_mont)
+
+    # -------- batched public API (leading ct axis, jnp backend) --------
+    def keyswitch_batched(self, ab, evk: EvalKey, level: int):
+        """Batched keyswitch of (B, l, N) polys through ONE jit trace."""
+        self._require_jnp("keyswitch")
+        self._note_keyswitch(self._plan(level), m=int(ab.shape[0]))
+        return self._ks_batched_fn(level)(ab, self.evk_tensor(evk, level))
+
+    def apply_galois_batched(self, c0b, c1b, galois: int, evk: EvalKey,
+                             level: int):
+        self._require_jnp("rotate")
+        self._note_keyswitch(self._plan(level), m=int(c0b.shape[0]))
+        self.counters.rotation += int(c0b.shape[0])
+        perm = self.perm_tensor([galois])[0]
+        return self._galois_batched_fn(level)(
+            c0b, c1b, perm, self.evk_tensor(evk, level)
+        )
+
+    def modup_batched(self, ab, level: int):
+        self._require_jnp("modup")
+        plan = self._plan(level)
+        plan_sizes = plan.group_sizes
+        self.counters.note_modup(plan.l, plan.l_ext, plan_sizes, plan.N,
+                                 m=int(ab.shape[0]))
+        return self._modup_batched_fn(level)(ab)
+
+    def hoisted_rotation_sum_batched(self, c0b, c1b, galois_list,
+                                     evks, level: int, pm_ext=None,
+                                     pm_base=None, pm_ext_mont=None,
+                                     digits=None):
+        """vmap over the ct axis: (B, l, N) c0/c1 (or (B, dnum, l_ext, N)
+        pre-computed ``digits``), shared perm/evk/plaintext tensors."""
+        self._require_jnp("hoisted_rotation_sum")
+        plan = self._plan(level)
+        self._note_hoisted(plan, len(galois_list), digits is None,
+                           m=int(c0b.shape[0]))
+        perms = self.perm_tensor(galois_list)
+        evk_all = self.evk_group_tensor(evks, level)
+        with_pt = pm_base is not None
+        fn = self._hoist_batched_fn(level, len(galois_list), with_pt,
+                                    digits is not None)
+        x = digits if digits is not None else c1b
+        return fn(c0b, x, perms, evk_all, pm_ext, pm_base, pm_ext_mont)

@@ -5,6 +5,12 @@ y = A @ z for an (nh x nh) complex matrix A is computed as
 over the non-zero generalized diagonals d.  BSGS splits d = i*bs + j
 (Eq. (3) of the paper) — exactly the two-serial-PKB structure HERO fuses.
 Both paths use the hoisted rotation-sum primitive (one ModUp per block).
+
+Both functions only touch the context's public op API, so they run
+eagerly on a ``CKKSContext`` or trace through the compiled runtime's
+``repro.runtime.compile.TraceContext`` unchanged — the compiled path
+additionally shares one ModUp across all baby-step blocks and, with
+``fusion=True``, collapses baby x giant into a single hoisted block.
 """
 from __future__ import annotations
 

@@ -7,12 +7,17 @@ Used by EvalMod in bootstrapping (scaled-sine approximation) and by HELR
 Scale management: every ciphertext carries an exact float scale; all
 cross-term additions go through ``align`` which mod-switches and
 scale-corrects via a constant multiplication.
+
+All helpers take the context as a parameter and only use its public op
+API (encode/pt_mul/multiply/double/level_down/...), so they run
+unchanged against either the functional ``CKKSContext`` or the
+runtime's symbolic ``repro.runtime.compile.TraceContext`` — the same
+source compiles through the DFG runtime and executes eagerly.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import poly
 from repro.core.ckks import CKKSContext, Ciphertext
 
 
@@ -51,16 +56,6 @@ def align(ctx: CKKSContext, ct: Ciphertext, level: int,
     return ctx.level_down(mul_const(ctx, ct, 1.0, scale), level)
 
 
-def scaled_double(ctx: CKKSContext, ct: Ciphertext) -> Ciphertext:
-    """2*ct without scale change (cheap: residues doubled mod q)."""
-    mods = ctx.pc.mods(ctx.chain(ct.level))
-    return Ciphertext(
-        poly.mul_scalar(ct.c0, (mods * 0 + 2).astype(mods.dtype), mods),
-        poly.mul_scalar(ct.c1, (mods * 0 + 2).astype(mods.dtype), mods),
-        ct.level, ct.scale,
-    )
-
-
 class ChebyshevEvaluator:
     """Builds T_k(x) ciphertexts on demand and combines them."""
 
@@ -75,7 +70,7 @@ class ChebyshevEvaluator:
         if k % 2 == 0:
             half = self.get(k // 2)
             sq = ctx.multiply(half, half, rescale=True)
-            out = add_const(ctx, scaled_double(ctx, sq), -1.0)
+            out = add_const(ctx, ctx.double(sq), -1.0)
         else:
             a, b = (k + 1) // 2, (k - 1) // 2
             ta, tb = self.get(a), self.get(b)
@@ -88,7 +83,7 @@ class ChebyshevEvaluator:
             else:
                 ta, tb = ctx.level_down(ta, lvl), ctx.level_down(tb, lvl)
             prod = ctx.multiply(ta, tb, rescale=True)
-            prod2 = scaled_double(ctx, prod)
+            prod2 = ctx.double(prod)
             # T_a*T_b*2 - T_{a-b};  a-b == 1 here.
             t1 = self.get(1)
             t1a = align(ctx, t1, prod2.level, prod2.scale)

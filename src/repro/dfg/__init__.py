@@ -3,7 +3,13 @@
 Pipeline:  trace/generate DFG  ->  PKB identify (layering)
         ->  degree-minimized expansion  ->  PKB fusion (DP evaluator)
         ->  hoisting rewrite  ->  IRF/EVF/hybrid dataflow mapping
-        ->  repro.sim (performance model) or repro.core (functional exec).
+        ->  repro.sim (performance model) or repro.runtime (compiled
+            functional execution on the keyswitch engine).
+
+``repro.runtime.compile.TraceContext`` builds this IR from unmodified
+program code and ``repro.runtime.lower`` turns identified/fused PKBs
+into real hoisted-rotation-sum invocations; ``repro.runtime.report``
+cross-checks the executed op counts against ``hoist.OpVolumes``.
 """
 from repro.dfg.graph import DFG, Node, OpKind  # noqa: F401
 from repro.dfg.pkb import PKB, identify_pkbs  # noqa: F401

@@ -26,8 +26,11 @@ class OpKind(enum.Enum):
     IP = "ip"              # inner product with evk digits
     PMUL = "pmul"          # plaintext mult
     CADD = "cadd"          # ct-ct add
+    CSUB = "csub"          # ct-ct sub (cost-identical to CADD)
+    CSCALE = "cscale"      # ct * small integer constant (scaled_double)
     PADD = "padd"
     RESCALE = "rescale"
+    LEVEL_DOWN = "level_down"   # drop limbs without scale change
     AUTOM = "autom"        # automorphism (permutation)
     # --- composite ops (pre-lowering) ---
     ROT = "rot"            # rotation keyswitch (expands to autom+ks chain)
@@ -38,10 +41,11 @@ class OpKind(enum.Enum):
 # ComOp/MemOp classification (paper Table I).
 COM_OPS = {OpKind.NTT, OpKind.INTT, OpKind.BCONV, OpKind.MODUP,
            OpKind.MODDOWN}
-MEM_OPS = {OpKind.IP, OpKind.PMUL, OpKind.CADD, OpKind.PADD,
-           OpKind.RESCALE, OpKind.AUTOM}
+MEM_OPS = {OpKind.IP, OpKind.PMUL, OpKind.CADD, OpKind.CSUB,
+           OpKind.CSCALE, OpKind.PADD, OpKind.RESCALE, OpKind.AUTOM}
 # EWOs commute with ModUp/ModDown (paper Sec. II-B2) — the expansion set.
-COMMUTATIVE_OPS = {OpKind.PMUL, OpKind.CADD, OpKind.PADD, OpKind.AUTOM}
+COMMUTATIVE_OPS = {OpKind.PMUL, OpKind.CADD, OpKind.CSUB, OpKind.CSCALE,
+                   OpKind.PADD, OpKind.AUTOM}
 KEYSWITCH_OPS = {OpKind.ROT, OpKind.CMULT, OpKind.CONJ}
 
 

@@ -49,17 +49,30 @@ class OpVolumes:
     moddown_count: int = 0
     ip_count: int = 0
     keyswitch_count: int = 0
+    # Per-digit ModUp leg volumes — ((ntt_words, bconv_macs), ...) one
+    # entry per decomposition digit, derived from the same (dnum, l_ext,
+    # N) shapes the keyswitch engine's plans use.  The group scheduler
+    # weights its up-phase xPU slices by these instead of a uniform
+    # split; blocks of differing dnum drop the legs when summed.
+    modup_legs: tuple = ()
 
     def __add__(self, o: "OpVolumes") -> "OpVolumes":
-        return OpVolumes(*[
+        out = OpVolumes(*[
             getattr(self, f.name) + getattr(o, f.name)
-            for f in dataclasses.fields(self)
+            for f in dataclasses.fields(self) if f.name != "modup_legs"
         ])
+        out.modup_legs = _merge_legs(self.modup_legs, o.modup_legs)
+        return out
 
     def scaled(self, c: float) -> "OpVolumes":
-        return OpVolumes(*[
-            getattr(self, f.name) * c for f in dataclasses.fields(self)
+        out = OpVolumes(*[
+            getattr(self, f.name) * c
+            for f in dataclasses.fields(self) if f.name != "modup_legs"
         ])
+        out.modup_legs = tuple(
+            (ntt * c, bc * c) for ntt, bc in self.modup_legs
+        )
+        return out
 
     @property
     def compute_words(self) -> float:
@@ -71,10 +84,23 @@ class OpVolumes:
         return self.comm_up_words + self.comm_down_words
 
 
+def _merge_legs(a: tuple, b: tuple) -> tuple:
+    """Elementwise sum of per-digit legs; blocks of differing dnum (or a
+    legless operand with real volumes) cannot be attributed per digit."""
+    if not a:
+        return b
+    if not b:
+        return a
+    if len(a) != len(b):
+        return ()
+    return tuple((x0 + y0, x1 + y1) for (x0, x1), (y0, y1) in zip(a, b))
+
+
 def _region_ewo_count(pkb: PKB) -> int:
     return sum(
         1 for nid in pkb.region
-        if pkb.dfg.nodes[nid].op in (OpKind.PMUL, OpKind.CADD, OpKind.PADD)
+        if pkb.dfg.nodes[nid].op in (OpKind.PMUL, OpKind.CADD, OpKind.CSUB,
+                                     OpKind.CSCALE, OpKind.PADD)
     )
 
 
@@ -91,6 +117,18 @@ def modup_volumes(l: int, k: int, alpha: int, N: int) -> OpVolumes:
     v.modup_ntt_words = v.ntt_words
     v.modup_bconv_macs = v.bconv_macs
     v.modup_count = 1
+    # per-digit legs: digit g INTTs its own a_g limbs and NTTs the ext-a_g
+    # new limbs — exactly the engine plan's (dnum, l_ext, N) shape with a
+    # short last group when alpha does not divide l
+    v.modup_legs = tuple(
+        (
+            (min(alpha, l - g * alpha)
+             + (ext - min(alpha, l - g * alpha))) * N,
+            min(alpha, l - g * alpha) * (ext - min(alpha, l - g * alpha))
+            * N,
+        )
+        for g in range(dnum)
+    )
     return v
 
 
@@ -225,8 +263,8 @@ def non_pkb_blocks(dfg: DFG, pkbs: list[PKB], k: int, alpha: int,
             else:
                 v.evk_load_words += evk_words(l, k, alpha, N)
             blocks.append(v)
-        elif node.op in (OpKind.PMUL, OpKind.CADD, OpKind.PADD,
-                         OpKind.RESCALE):
+        elif node.op in (OpKind.PMUL, OpKind.CADD, OpKind.CSUB,
+                         OpKind.CSCALE, OpKind.PADD, OpKind.RESCALE):
             residual.ewo_words += 2 * l * N
             if node.op == OpKind.RESCALE:
                 residual.ntt_words += 2 * N
@@ -237,36 +275,12 @@ def program_volumes(dfg: DFG, pkbs: list[PKB], k: int, alpha: int,
                     strategy: str = "hoist", dataflow: str = "IRF",
                     nh: int = 1 << 15) -> OpVolumes:
     """Whole-program volumes: PKBs + non-PKB keyswitches (CMULT relin) +
-    standalone EWOs."""
+    standalone EWOs (the latter two via :func:`non_pkb_blocks`, the same
+    per-block assembly the simulator schedules)."""
     total = OpVolumes()
-    in_pkb: set[int] = set()
     for p in pkbs:
         total = total + pkb_volumes(p, k, alpha, strategy, dataflow, nh)
-        in_pkb |= set(p.rotations) | p.region
-    N = dfg.N
-    for nid, node in dfg.nodes.items():
-        if nid in in_pkb:
-            continue
-        l = node.limbs
-        if node.op in (OpKind.CMULT, OpKind.CONJ):
-            # relin/conj keyswitch: 1 ModUp + 1 ModDown + 1 IP, never hoisted
-            v = (modup_volumes(l, k, alpha, N)
-                 + moddown_volumes(l, k, alpha, N, 2)
-                 + ip_volumes(l, k, alpha, N))
-            if node.op == OpKind.CMULT:
-                v.ewo_words += 4 * l * N      # tensor products d0,d1,d2
-            v.keyswitch_count += 1
-            v.evk_set_words = evk_words(l, k, alpha, N)
-            if dataflow == "IRF":
-                dnum = -(-l // alpha)
-                v.comm_up_words += dnum * (l + k) * N
-                v.comm_down_words += 2 * (l + k) * N
-            else:
-                v.evk_load_words += evk_words(l, k, alpha, N)
-            total = total + v
-        elif node.op in (OpKind.PMUL, OpKind.CADD, OpKind.PADD):
-            total.ewo_words += 2 * l * N
-        elif node.op == OpKind.RESCALE:
-            total.ewo_words += 2 * l * N
-            total.ntt_words += 2 * N          # one-limb INTT/NTT pair
-    return total
+    blocks, residual = non_pkb_blocks(dfg, pkbs, k, alpha, dataflow)
+    for v in blocks:
+        total = total + v
+    return total + residual

@@ -2,6 +2,11 @@
 
 The handle mirrors repro.core.ckks's API so the same program shape can be
 run functionally (small ring) and costed/optimized (production ring).
+
+``repro.runtime.compile.TraceContext`` extends this builder with the
+attributes real execution needs (plaintext specs, exact scales, level
+management ops) — programs traced there both simulate AND run on the
+keyswitch engine via ``repro.runtime``.
 """
 from __future__ import annotations
 

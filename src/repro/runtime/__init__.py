@@ -1,0 +1,30 @@
+"""repro.runtime — DFG-compiled program executor for the CKKS scheme.
+
+The HERO pipeline in ``repro.dfg`` (PKB identification -> degree-
+minimized expansion -> fusion DP -> dataflow mapping) drives the
+*simulator*; this package closes the loop by lowering the same IR onto
+the *functional* runtime:
+
+  trace   (compile.TraceContext)  — run unmodified program code
+          (``core.linear`` matvec/BSGS, ``core.polyeval`` Chebyshev)
+          against a symbolic context that mirrors ``CKKSContext`` and
+          records a ``dfg.trace.ProgramBuilder`` graph, the same IR the
+          simulator consumes;
+  compile (compile.compile_program) — identify PKBs, optionally run the
+          ``dfg.fusion.optimal_fusion`` DP, and lower (lower.py) fused
+          plans to hoisted-rotation-sum blocks + eager engine EWOs;
+  execute (exec.ProgramExecutor)  — run the lowered plan on a real
+          ``CKKSContext``/``KeyswitchEngine``, sharing one ModUp across
+          every block anchored on the same ciphertext, and batching
+          independent ciphertexts through ONE jit trace via ``jax.vmap``
+          over the ct axis;
+  report  (report.ExecutionReport) — actual ModUp/ModDown/IP/NTT counts
+          plus the engine's real (dnum, l_ext, N) plan shapes, cross-
+          checked against ``dfg.hoist``'s predicted OpVolumes and fed
+          into the ``sim.schedule`` group pipeline.
+"""
+from repro.runtime.compile import (  # noqa: F401
+    CompiledProgram, TraceContext, compile_program,
+)
+from repro.runtime.exec import ProgramExecutor  # noqa: F401
+from repro.runtime.report import ExecutionReport  # noqa: F401

@@ -1,0 +1,303 @@
+"""Executor: run a ``CompiledProgram`` on a real ``CKKSContext``.
+
+Two entry points:
+
+* :meth:`ProgramExecutor.run` — one ciphertext per program input.
+  Hoisted steps sharing an anchor share ONE ModUp (``ctx.hoist_digits``
+  once per anchor, digits fed to every block); everything is dispatched
+  through the exact same engine entry points the eager path uses, which
+  is what makes ``fusion=False`` compilation bit-exact with eager code.
+
+* :meth:`ProgramExecutor.run_batched` — a LIST of independent
+  ciphertexts per input.  The whole batch flows through the engine's
+  vmap entry points: one jit trace per (op, level, shape) plan covers
+  every ciphertext (``engine.trace_counts`` asserts this), elementwise
+  ops broadcast over the leading ct axis, and plaintext/evk tensors are
+  shared across the batch.  Results are bit-exact with the per-ct run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import poly
+from repro.core.ckks import CKKSContext, Ciphertext, Plaintext
+from repro.dfg.graph import OpKind
+from repro.runtime.compile import CompiledProgram
+from repro.runtime.lower import EagerStep, HoistedStep
+
+
+@dataclasses.dataclass
+class ExecResult:
+    outputs: dict[str, Ciphertext | list[Ciphertext]]
+    report: object | None = None
+
+    def __getitem__(self, tag: str):
+        return self.outputs[tag]
+
+
+class ProgramExecutor:
+    """Binds compiled programs to one ``CKKSContext``.
+
+    Plaintext encodings are cached per (program, plaintext) so repeated
+    executions reuse the engine's hoisted plaintext/evk tensor caches.
+    """
+
+    def __init__(self, ctx: CKKSContext):
+        self.ctx = ctx
+        self._pt_cache: dict[tuple, Plaintext] = {}
+        # pins compiled programs so the id()-based cache keys can never
+        # be recycled by a different program; bounded FIFO
+        self._pins: dict[int, CompiledProgram] = {}
+        self._pins_max = 32
+        self._rescale_fns: dict[int, object] = {}
+
+    def _pin(self, compiled: CompiledProgram) -> None:
+        if id(compiled) in self._pins:
+            return
+        while len(self._pins) >= self._pins_max:
+            dead, _ = self._pins.popitem()
+            self._pt_cache = {k: v for k, v in self._pt_cache.items()
+                              if k[0] != dead}
+        self._pins[id(compiled)] = compiled
+
+    def _encode_spec(self, compiled: CompiledProgram, pid: int) -> Plaintext:
+        """Encode a traced plaintext spec exactly as the eager path would
+        (same values/level/scale floats); cached per (program, pt)."""
+        key = (id(compiled), "pt", pid)
+        if key not in self._pt_cache:
+            spec = compiled.pt_specs[pid]
+            self._pt_cache[key] = self.ctx.encode(
+                spec.values, level=spec.level, scale=spec.scale)
+        return self._pt_cache[key]
+
+    # ------------------------- public API ------------------------------
+    def run(self, compiled: CompiledProgram,
+            inputs: dict[str, Ciphertext],
+            with_report: bool = False) -> ExecResult:
+        return self._run(compiled, inputs, batch=0,
+                         with_report=with_report)
+
+    def run_batched(self, compiled: CompiledProgram,
+                    inputs: dict[str, list[Ciphertext]],
+                    with_report: bool = False) -> ExecResult:
+        """Execute over B independent ciphertexts per input at once."""
+        if not self.ctx.use_engine:
+            raise NotImplementedError("batched execution needs the engine")
+        batch = None
+        stacked = {}
+        for tag, cts in inputs.items():
+            assert len({(c.level, c.scale) for c in cts}) == 1, \
+                "batched inputs must share level and scale"
+            batch = len(cts) if batch is None else batch
+            assert len(cts) == batch, "all inputs must share batch size"
+            stacked[tag] = Ciphertext(
+                jnp.stack([c.c0 for c in cts]),
+                jnp.stack([c.c1 for c in cts]),
+                cts[0].level, cts[0].scale,
+            )
+        res = self._run(compiled, stacked, batch=batch,
+                        with_report=with_report)
+        outputs = {
+            tag: [Ciphertext(ct.c0[b], ct.c1[b], ct.level, ct.scale)
+                  for b in range(batch)]
+            for tag, ct in res.outputs.items()
+        }
+        return ExecResult(outputs, res.report)
+
+    # ------------------------- execution loop --------------------------
+    def _run(self, compiled: CompiledProgram, inputs, batch: int,
+             with_report: bool) -> ExecResult:
+        ctx = self.ctx
+        self._pin(compiled)
+        before = ctx.counters.snapshot()
+        values: dict[int, Ciphertext] = {}
+        digits: dict[int, object] = {}
+        outputs: dict[str, Ciphertext] = {}
+        for step in compiled.steps:
+            if isinstance(step, HoistedStep):
+                self._exec_hoisted(compiled, step, values, digits, batch)
+            else:
+                self._exec_eager(compiled, step, values, outputs, inputs,
+                                 batch)
+        report = None
+        if with_report:
+            from repro.runtime.report import build_report
+
+            report = build_report(
+                compiled, ctx, ctx.counters.delta(before),
+                batch=max(batch, 1),
+            )
+        return ExecResult(outputs, report)
+
+    # ------------------------- hoisted steps ---------------------------
+    def _exec_hoisted(self, compiled, step: HoistedStep, values, digits,
+                      batch: int) -> None:
+        ctx = self.ctx
+        ct = values[step.anchor]
+        lvl = ct.level
+        assert lvl == step.level, "anchor level drifted from the trace"
+        pts = None
+        if step.pt_terms is not None:
+            pts = [self._step_pt(compiled, step, s) for s in step.steps]
+        dig = None
+        if ctx.use_engine:
+            dig = digits.get(step.anchor)
+            if dig is None:
+                dig = (ctx.engine.modup_batched(ct.c1, lvl) if batch
+                       else ctx.hoist_digits(ct))
+                digits[step.anchor] = dig
+        if batch:
+            out = self._hoisted_batched(ct, step, pts, dig)
+        else:
+            out = ctx.hoisted_rotation_sum(ct, step.steps, pts,
+                                           rescale=False, digits=dig)
+        self._finish(compiled, step.out, out, values)
+
+    def _hoisted_batched(self, ct, step: HoistedStep, pts, dig):
+        """Batched mirror of ``CKKSContext.hoisted_rotation_sum``."""
+        ctx = self.ctx
+        lvl = ct.level
+        gs = [ctx.pc.rns.galois_for_rotation(s) for s in step.steps]
+        keys = [ctx.keys.rot_key(s) for s in step.steps]
+        pm_ext = pm_base = pm_ext_m = None
+        if pts is not None:
+            pm_ext, pm_base, pm_ext_m = ctx._pm_stack(tuple(pts), lvl)
+        c0, c1 = ctx.engine.hoisted_rotation_sum_batched(
+            ct.c0, ct.c1, gs, keys, lvl, pm_ext, pm_base, pm_ext_m,
+            digits=dig,
+        )
+        scale = ct.scale * (pts[0].scale if pts is not None else 1.0)
+        return Ciphertext(c0, c1, lvl, scale)
+
+    def _step_pt(self, compiled, step: HoistedStep, s: int) -> Plaintext:
+        """The (possibly fused) plaintext multiplying Rot_s(anchor)."""
+        terms = step.pt_terms[s]
+        specs = compiled.pt_specs
+        (c0, fs0) = terms[0]
+        if len(terms) == 1 and c0 == 1.0 and len(fs0) == 1 \
+                and fs0[0][1] == 0:
+            # exact single-plaintext term: encode precisely as traced
+            return self._encode_spec(compiled, fs0[0][0])
+        key = (id(compiled), "fused", step.out, s)
+        if key not in self._pt_cache:
+            val = None
+            for c, fs in terms:
+                term = np.asarray(c, dtype=complex)
+                for pid, r in fs:
+                    term = term * np.roll(specs[pid].values, -r)
+                val = term if val is None else val + term
+            self._pt_cache[key] = self.ctx.encode(
+                val, level=step.level, scale=step.pt_scale)
+        return self._pt_cache[key]
+
+    # ------------------------- eager steps -----------------------------
+    def _node_pt(self, compiled, node) -> Plaintext:
+        return self._encode_spec(compiled, node.attrs["pt"])
+
+    def _exec_eager(self, compiled, step: EagerStep, values, outputs,
+                    inputs, batch: int) -> None:
+        ctx = self.ctx
+        node = compiled.dfg.nodes[step.nid]
+        op = node.op
+        a = values[node.args[0]] if node.args else None
+        if op == OpKind.INPUT:
+            ct = inputs[node.attrs["tag"]]
+            assert ct.level == node.attrs["level"], \
+                f"input {node.attrs['tag']}: level {ct.level} != traced " \
+                f"{node.attrs['level']}"
+            traced_scale = node.attrs["scale"]
+            assert abs(ct.scale / traced_scale - 1.0) < 1e-9, \
+                f"input {node.attrs['tag']}: scale {ct.scale} != traced " \
+                f"{traced_scale}"
+            values[step.nid] = ct
+            return
+        if op == OpKind.OUTPUT:
+            outputs[node.attrs["tag"]] = a
+            return
+        if op == OpKind.ROT:
+            out = self._rotate(a, node.attrs["steps"], batch)
+        elif op == OpKind.CONJ:
+            out = self._conjugate(a, batch)
+        elif op == OpKind.CMULT:
+            out = self._multiply(a, values[node.args[1]], batch)
+        elif op == OpKind.CADD:
+            out = ctx.add(a, values[node.args[1]])
+        elif op == OpKind.CSUB:
+            out = ctx.sub(a, values[node.args[1]])
+        elif op == OpKind.CSCALE:
+            out = ctx.double(a)
+        elif op == OpKind.PMUL:
+            out = ctx.pt_mul(a, self._node_pt(compiled, node),
+                             rescale=False)
+        elif op == OpKind.PADD:
+            out = ctx.pt_add(a, self._node_pt(compiled, node))
+        elif op == OpKind.RESCALE:
+            out = self._rescale(a, batch)
+        elif op == OpKind.LEVEL_DOWN:
+            n = node.attrs["target"] + 1
+            out = Ciphertext(a.c0[..., :n, :], a.c1[..., :n, :],
+                             node.attrs["target"], a.scale)
+        else:
+            raise NotImplementedError(f"cannot execute {op.value}")
+        self._finish(compiled, step.nid, out, values)
+
+    def _finish(self, compiled, nid: int, out: Ciphertext, values) -> None:
+        """Replay the trace-time scale float (identical arithmetic to the
+        eager path; for fused blocks it pins the unfused trajectory)."""
+        scale = compiled.dfg.nodes[nid].attrs.get("scale")
+        if scale is not None:
+            out.scale = scale
+        values[nid] = out
+
+    # ----- batched op mirrors (engine vmap + broadcasting EWOs) --------
+    def _rotate(self, ct, steps: int, batch: int) -> Ciphertext:
+        ctx = self.ctx
+        if not batch:
+            return ctx.rotate(ct, steps)
+        g = ctx.pc.rns.galois_for_rotation(steps)
+        c0, c1 = ctx.engine.apply_galois_batched(
+            ct.c0, ct.c1, g, ctx.keys.rot_key(steps), ct.level)
+        return Ciphertext(c0, c1, ct.level, ct.scale)
+
+    def _conjugate(self, ct, batch: int) -> Ciphertext:
+        ctx = self.ctx
+        if not batch:
+            return ctx.conjugate(ct)
+        g = ctx.pc.rns.galois_conjugate()
+        c0, c1 = ctx.engine.apply_galois_batched(
+            ct.c0, ct.c1, g, ctx.keys.conj_key, ct.level)
+        return Ciphertext(c0, c1, ct.level, ct.scale)
+
+    def _multiply(self, a, b, batch: int) -> Ciphertext:
+        ctx = self.ctx
+        if not batch:
+            return ctx.multiply(a, b, rescale=False)
+        lvl = a.level
+        mods = ctx.pc.mods(ctx.chain(lvl))
+        d0 = poly.mul(a.c0, b.c0, mods)
+        d1 = poly.add(
+            poly.mul(a.c0, b.c1, mods), poly.mul(a.c1, b.c0, mods), mods
+        )
+        d2 = poly.mul(a.c1, b.c1, mods)
+        e0, e1 = ctx.engine.keyswitch_batched(d2, ctx.keys.mult_key, lvl)
+        return Ciphertext(poly.add(d0, e0, mods), poly.add(d1, e1, mods),
+                          lvl, a.scale * b.scale)
+
+    def _rescale(self, ct, batch: int) -> Ciphertext:
+        ctx = self.ctx
+        if not batch:
+            return ctx.rescale(ct)
+        lvl = ct.level
+        if lvl not in self._rescale_fns:
+            self._rescale_fns[lvl] = jax.jit(jax.vmap(
+                partial(poly.rescale, level=lvl, pc=ctx.pc)
+            ))
+        fn = self._rescale_fns[lvl]
+        q_last = ctx.chain(lvl)[-1]
+        return Ciphertext(fn(ct.c0), fn(ct.c1), lvl - 1,
+                          ct.scale / q_last)

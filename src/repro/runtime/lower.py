@@ -1,0 +1,283 @@
+"""Lowering: traced DFG + fusion plan -> executable hoisted/eager steps.
+
+Each PKB (or fused PKB group) is *lifted*: the expression under each of
+its sinks is rewritten, by the identities the paper's HERO framework is
+built on, into a canonical linear combination
+
+    sink = sum_t  coeff_t * [ prod_f roll(pt_f, -r_f) ] * Rot_{s_t}(anchor)
+
+using Rot_a(Rot_b(x)) = Rot_{a+b}(x) and Rot_s(pt * x) =
+roll(pt, -s) * Rot_s(x) (Eq. (4) of the paper).  A lifted sink lowers to
+ONE ``hoisted_rotation_sum`` engine invocation; sinks sharing an anchor
+ciphertext share one ModUp (cross-block double hoisting).  Anything that
+does not lift — multi-anchor PKBs (e.g. the giant-step blocks of BSGS,
+whose rotations consume different ciphertexts), PAdds inside a region,
+CMult chains — falls back to eager per-op execution, which keeps the
+compiled path bit-exact with the eager one by construction.
+
+With ``fusion=True`` the lift is allowed to recurse across the members
+of an ``optimal_fusion`` group, composing serial PKBs into one block
+(strictly fewer ModUps/ModDowns, numerically equivalent).  Without it
+the lift stops at direct rotations of the anchor, which preserves
+bit-exactness.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.dfg.fusion import optimal_fusion
+from repro.dfg.graph import OpKind
+from repro.dfg.pkb import PKB, identify_pkbs
+from repro.runtime.compile import CompiledProgram, TraceContext
+
+# A term key: (rotation step, sorted ((pt id, roll), ...) factor tuple).
+Term = tuple[int, tuple[tuple[int, int], ...]]
+
+
+class Unliftable(Exception):
+    """Raised when a sink expression has no hoisted-rotation-sum form."""
+
+
+@dataclasses.dataclass
+class HoistedStep:
+    """One hoisted-rotation-sum invocation producing node ``out``."""
+
+    out: int
+    anchor: int
+    level: int
+    steps: list[int]                        # sorted distinct steps
+    # step -> [(coeff, factors)], or None for a pure rotation sum
+    pt_terms: dict[int, list[tuple[float, tuple]]] | None
+    pt_scale: float = 1.0                   # combined plaintext scale
+    exact: bool = True                      # single-factor, unrotated pts
+    fused_members: int = 1
+    fresh_modup: bool = True                # False -> digits shared
+
+    @property
+    def n_rot(self) -> int:
+        return len(self.steps)
+
+
+@dataclasses.dataclass
+class EagerStep:
+    """Execute one DFG node directly on the context."""
+
+    nid: int
+
+
+def _lift(dfg, sink: int, anchor: int, allowed_rots: set[int],
+          nh: int) -> tuple[dict[Term, float], set[int]]:
+    """Rewrite the expression under ``sink`` over rotations of ``anchor``.
+
+    Returns (terms, visited-interior-nodes).  Raises Unliftable when the
+    walk reaches anything outside {anchor, allowed rots, PMul, CAdd,
+    CSub, CScale}."""
+    memo: dict[int, dict[Term, float]] = {}
+    visited: set[int] = set()
+
+    def ev(nid: int) -> dict[Term, float]:
+        if nid == anchor:
+            return {(0, ()): 1.0}
+        if nid in memo:
+            return memo[nid]
+        node = dfg.nodes[nid]
+        if node.op == OpKind.ROT and nid in allowed_rots:
+            s = node.attrs["steps"] % nh
+            out: dict[Term, float] = {}
+            for (t, fs), c in ev(node.args[0]).items():
+                key = ((t + s) % nh,
+                       tuple(sorted((p, (r + s) % nh) for p, r in fs)))
+                out[key] = out.get(key, 0.0) + c
+        elif node.op == OpKind.PMUL:
+            pid = node.attrs["pt"]
+            out = {}
+            for (t, fs), c in ev(node.args[0]).items():
+                key = (t, tuple(sorted(fs + ((pid, 0),))))
+                out[key] = out.get(key, 0.0) + c
+        elif node.op in (OpKind.CADD, OpKind.CSUB):
+            out = dict(ev(node.args[0]))
+            sign = -1.0 if node.op == OpKind.CSUB else 1.0
+            for k, c in ev(node.args[1]).items():
+                out[k] = out.get(k, 0.0) + sign * c
+        elif node.op == OpKind.CSCALE:
+            c0 = float(node.attrs.get("c", 2))
+            out = {k: c * c0 for k, c in ev(node.args[0]).items()}
+        else:
+            raise Unliftable(f"node {nid} ({node.op.value}) blocks hoisting")
+        memo[nid] = out
+        visited.add(nid)
+        return out
+
+    return ev(sink), visited
+
+
+def _build_step(dfg, sink: int, anchor: int, terms: dict[Term, float],
+                pt_specs, exact_only: bool, fused_members: int,
+                allow_bare: bool = False) -> HoistedStep:
+    """Validate lifted terms and shape them into a HoistedStep."""
+    terms = {k: c for k, c in terms.items() if c != 0.0}
+    if not terms:
+        raise Unliftable("empty expression")
+    if not allow_bare:
+        if all(s == 0 for (s, _) in terms):
+            raise Unliftable("no rotation work — plain EWOs stay eager")
+        if len(terms) == 1 and not next(iter(terms))[1]:
+            # a lone pt-less rotation is exactly ctx.rotate — keep it
+            # eager so the compiled trajectory matches eager bit for bit
+            raise Unliftable("single bare rotation")
+    with_pt = any(fs for (_, fs) in terms)
+    by_step: dict[int, list[tuple[float, tuple]]] = {}
+    scale = None
+    for (s, fs), c in terms.items():
+        if with_pt and not fs:
+            raise Unliftable("mixed pt/no-pt terms")
+        if not fs and c != 1.0:
+            raise Unliftable("scaled pure-rotation term")
+        if exact_only and (c != 1.0 or len(fs) > 1
+                           or any(r != 0 for _, r in fs)):
+            raise Unliftable("needs the Eq. (4) rewrite (fusion only)")
+        if fs:
+            term_scale = 1.0
+            for p, _ in fs:
+                term_scale *= pt_specs[p].scale
+            if scale is None:
+                scale = term_scale
+            elif abs(term_scale / scale - 1.0) > 1e-9:
+                raise Unliftable("inconsistent combined plaintext scales")
+        by_step.setdefault(s, []).append((c, fs))
+    node = dfg.nodes[sink]
+    return HoistedStep(
+        out=sink, anchor=anchor, level=node.limbs - 1,
+        steps=sorted(by_step), pt_terms=by_step if with_pt else None,
+        pt_scale=scale if scale is not None else 1.0,
+        exact=exact_only, fused_members=fused_members,
+    )
+
+
+_DESCEND = {OpKind.CADD, OpKind.CSUB, OpKind.CSCALE, OpKind.PMUL,
+            OpKind.PADD}
+
+
+def _lower_group(dfg, members: list[PKB], nh: int, pt_specs,
+                 exact_only: bool) -> tuple[list[HoistedStep], set[int]]:
+    """Lower one (possibly fused) PKB group.
+
+    Each sink is lifted whole when possible; a sink whose expression
+    mixes in foreign values (e.g. the final CAdd of BSGS sums one baby
+    block with the ROTATED other — entangled by the commutative forward
+    walk) is decomposed instead: we descend through its EWOs/rotations
+    and lower every MAXIMAL liftable subtree, leaving the rest eager.
+    This reproduces the eager block structure exactly while still
+    sharing one ModUp across all blocks on the same anchor.
+
+    Raises Unliftable only when nothing in the group lifts."""
+    first, last = members[0], members[-1]
+    if len(first.in_anchors) != 1:
+        raise Unliftable("multi-anchor PKB")
+    anchor = next(iter(first.in_anchors))
+    anchor_level = dfg.nodes[anchor].limbs - 1
+    allowed = set()
+    for m in members:
+        allowed |= set(m.rotations)
+
+    steps: dict[int, HoistedStep] = {}
+    consumed: set[int] = set()
+    tried: set[int] = set()
+
+    def collect(nid: int) -> None:
+        if nid in tried or nid == anchor:
+            return
+        tried.add(nid)
+        node = dfg.nodes[nid]
+        if node.limbs - 1 == anchor_level:
+            try:
+                terms, visited = _lift(dfg, nid, anchor, allowed, nh)
+                steps[nid] = _build_step(dfg, nid, anchor, terms, pt_specs,
+                                         exact_only, len(members))
+                consumed.update(visited)
+                return
+            except Unliftable:
+                pass
+        if node.op in _DESCEND or (node.op == OpKind.ROT
+                                   and nid in allowed):
+            for arg in set(node.args):
+                collect(arg)
+
+    for sink in sorted(last.out_sinks):
+        collect(sink)
+    if not steps:
+        raise Unliftable("no liftable subexpression in group")
+    # interior values with consumers outside the lowered region stay
+    # live: lower them as their own (ModUp-sharing) hoisted steps
+    for nid in sorted(consumed):
+        if nid in steps:
+            continue
+        if dfg.succs(nid) - consumed:
+            terms, _ = _lift(dfg, nid, anchor, allowed, nh)
+            steps[nid] = _build_step(dfg, nid, anchor, terms, pt_specs,
+                                     exact_only, len(members),
+                                     allow_bare=True)
+    return list(steps.values()), consumed - set(steps)
+
+
+def lower_program(tc: TraceContext, fusion: bool = False,
+                  capacity_words: float | None = None,
+                  max_group: int = 4) -> CompiledProgram:
+    params = tc.params
+    dfg = tc.g
+    nh = params.num_slots
+    pkbs = sorted(identify_pkbs(dfg), key=lambda p: p.layer)
+    plan = None
+    if fusion and pkbs:
+        plan = optimal_fusion(
+            pkbs, params.k, params.alpha, nh,
+            capacity_words=(capacity_words if capacity_words is not None
+                            else float("inf")),
+            max_group=max_group,
+        )
+        groups = plan.groups
+    else:
+        groups = [[i] for i in range(len(pkbs))]
+
+    hoisted: dict[int, HoistedStep] = {}      # out nid -> step
+    consumed: set[int] = set()
+    for group in groups:
+        members = [pkbs[i] for i in group]
+        tries = [members] if len(members) == 1 else [members] + [
+            [m] for m in members
+        ]
+        for attempt in tries:
+            try:
+                steps, interior = _lower_group(
+                    dfg, attempt, nh, tc.pt_specs,
+                    exact_only=(len(attempt) == 1),
+                )
+            except Unliftable:
+                continue
+            for st in steps:
+                hoisted[st.out] = st
+            consumed |= interior
+            if attempt is members:
+                break
+        # a member that lowered nowhere simply executes eagerly
+
+    # Order steps along the topo order; first hoisted step per anchor
+    # performs the (shared) ModUp.
+    steps: list = []
+    seen_anchor: set[int] = set()
+    for nid in dfg.topo_order():
+        if nid in hoisted:
+            st = hoisted[nid]
+            st.fresh_modup = st.anchor not in seen_anchor
+            seen_anchor.add(st.anchor)
+            steps.append(st)
+        elif nid in consumed:
+            continue
+        else:
+            steps.append(EagerStep(nid))
+
+    return CompiledProgram(
+        params=params, dfg=dfg, pt_specs=tc.pt_specs, inputs=dict(tc.inputs),
+        outputs=dict(tc.outputs), steps=steps, pkbs=pkbs, fusion_plan=plan,
+        fused=fusion,
+    )

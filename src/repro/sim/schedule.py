@@ -175,6 +175,26 @@ def _xpu_phase_split(v, hw: HWConfig) -> float:
     return up / total if total > 0 else 1.0
 
 
+def _up_slice_weights(v, hw: HWConfig, groups: int, dnum: int) -> list[float]:
+    """Per-slice weights for the up-phase xPU work.
+
+    When the block carries per-digit ModUp leg volumes (``v.modup_legs``,
+    derived from the keyswitch engine's real (dnum, l_ext, N) plan
+    shapes), slice g is weighted by digit g % dnum's actual leg seconds —
+    a short last decomposition group gets a proportionally shorter xPU
+    slice, which changes fill/drain without changing any busy total.
+    Falls back to a uniform split when legs are unavailable or the group
+    count does not tile the digits."""
+    legs = getattr(v, "modup_legs", ())
+    if not legs or len(legs) != dnum or groups % max(dnum, 1):
+        return [1.0 / groups] * groups
+    w = [ntt / hw.ntt_tput + bc / hw.bconv_tput for ntt, bc in legs]
+    total = sum(w) * (groups // dnum)
+    if total <= 0.0:
+        return [1.0 / groups] * groups
+    return [w[g % dnum] / total for g in range(groups)]
+
+
 def build_block_tasks(graph: _TaskGraph, block_idx: int, times: dict,
                       v, hw: HWConfig,
                       prev_outputs: list[Task],
@@ -192,6 +212,7 @@ def build_block_tasks(graph: _TaskGraph, block_idx: int, times: dict,
     pipelined = hw.dual_overlap and hw.xmu_tput > 0
     groups = pipeline_groups(times["dnum"], pipelined)
     f_up = _xpu_phase_split(v, hw)
+    up_w = _up_slice_weights(v, hw, groups, max(times["dnum"], 1))
 
     outputs: list[Task] = []
     for g in range(groups):
@@ -210,7 +231,7 @@ def build_block_tasks(graph: _TaskGraph, block_idx: int, times: dict,
             outputs.append((chain or ev or prev_outputs[-1:] or [None])[-1])
             continue
         up_chain = graph.chain(
-            [(XPU, f_up * t_xpu / groups), (LINK, t_up / groups)],
+            [(XPU, f_up * t_xpu * up_w[g]), (LINK, t_up / groups)],
             deps, f"b{block_idx}.g{g}.up", block_idx, g)
         if pipelined:
             # evk digits stream ahead on their own engine

@@ -1,0 +1,306 @@
+"""Compiled runtime tests: trace -> PKB lowering -> engine execution.
+
+Covers the acceptance gates of the runtime subsystem:
+  * compiled matvec-BSGS / Chebyshev bit-exact with the eager path
+  * compiled execution performs FEWER ModUps (shared-anchor hoisting),
+    fusion fewer still — asserted via the op counters
+  * vmap-batched execution bit-exact with the per-ct loop, one jit
+    trace per batched plan (``engine.trace_counts``)
+  * predicted-vs-executed op-count reconciliation + plan-shape check
+  * the execution report feeds the event-driven group scheduler
+"""
+import numpy as np
+import pytest
+
+from repro.core import linear
+from repro.core.ckks import CKKSContext
+from repro.core.params import CKKSParams
+from repro.runtime import ProgramExecutor, TraceContext, compile_program
+
+
+def _ct_equal(a, b):
+    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
+            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+
+
+def _sparse(rng, nh, diag_steps):
+    A = np.zeros((nh, nh), dtype=complex)
+    for d in diag_steps:
+        v = rng.normal(size=nh)
+        for i in range(nh):
+            A[i, (i + d) % nh] = v[i]
+    return A
+
+
+def _trace_matvec(params, diags, bs=0):
+    tc = TraceContext(params)
+    h = tc.input("x", level=params.L, scale=params.scale)
+    if bs:
+        out = linear.matvec_bsgs(tc, h, diags, bs=bs)
+    else:
+        out = linear.matvec_diag(tc, h, diags)
+    tc.output(out, "y")
+    return tc
+
+
+@pytest.fixture(scope="module")
+def rctx():
+    params = CKKSParams(logN=9, L=5, alpha=2, k=3, q_bits=29, scale_bits=29)
+    return CKKSContext(params, seed=7)
+
+
+@pytest.fixture(scope="module")
+def bsgs_case(rctx):
+    rng = np.random.default_rng(5)
+    nh = rctx.params.num_slots
+    A = _sparse(rng, nh, list(range(8)))
+    diags = linear.matrix_diagonals(A)
+    z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+    return A, diags, z, rctx.encrypt(z)
+
+
+# ----------------------- bit-exact parity --------------------------------
+
+def test_compiled_matvec_diag_bitexact(rctx, bsgs_case):
+    A, diags, z, ct = bsgs_case
+    tc = _trace_matvec(rctx.params, diags)
+    comp = compile_program(tc)
+    assert comp.n_hoisted == 1          # one PKB -> one hoisted block
+    ex = ProgramExecutor(rctx)
+    got = ex.run(comp, {"x": ct})["y"]
+    exp = linear.matvec_diag(rctx, ct, diags)
+    assert _ct_equal(got, exp)
+    assert got.scale == exp.scale and got.level == exp.level
+    ref = A @ z
+    assert np.abs(rctx.decrypt(got) - ref).max() / np.abs(ref).max() < 1e-3
+
+
+def test_compiled_bsgs_bitexact_fewer_modups(rctx, bsgs_case):
+    A, diags, z, ct = bsgs_case
+    c = rctx.counters
+    s0 = c.snapshot()
+    exp = linear.matvec_bsgs(rctx, ct, diags, bs=4)
+    eager_modups = c.delta(s0).modup
+
+    comp = compile_program(_trace_matvec(rctx.params, diags, bs=4))
+    ex = ProgramExecutor(rctx)
+    s1 = c.snapshot()
+    got = ex.run(comp, {"x": ct})["y"]
+    compiled_modups = c.delta(s1).modup
+    assert _ct_equal(got, exp)
+    assert got.scale == exp.scale
+    # the baby-step blocks share ONE ModUp through the digits cache
+    assert compiled_modups < eager_modups
+
+
+def test_fused_bsgs_fewest_modups(rctx, bsgs_case):
+    """HERO fusion collapses baby x giant into ONE hoisted block: a
+    single ModUp/ModDown, numerically equivalent to the eager result."""
+    A, diags, z, ct = bsgs_case
+    tc = _trace_matvec(rctx.params, diags, bs=4)
+    comp = compile_program(tc)
+    fused = compile_program(tc, fusion=True)
+    assert fused.fusion_plan is not None and fused.fusion_plan.groups
+    ex = ProgramExecutor(rctx)
+    c = rctx.counters
+    s0 = c.snapshot()
+    ex.run(comp, {"x": ct})
+    unfused_counts = c.delta(s0)
+    s1 = c.snapshot()
+    got = ex.run(fused, {"x": ct})["y"]
+    fused_counts = c.delta(s1)
+    assert fused_counts.modup == 1 and fused_counts.moddown == 1
+    assert fused_counts.modup < unfused_counts.modup
+    ref = A @ z
+    assert np.abs(rctx.decrypt(got) - ref).max() / np.abs(ref).max() < 1e-3
+
+
+@pytest.fixture(scope="module")
+def cheb_ctx():
+    p = CKKSParams(logN=9, L=9, alpha=2, k=3, q_bits=29, scale_bits=29)
+    return CKKSContext(p, seed=11)
+
+
+@pytest.fixture(scope="module")
+def cheb_case(cheb_ctx):
+    from repro.core.polyeval import chebyshev_coeffs, eval_chebyshev
+
+    rng = np.random.default_rng(9)
+    nh = cheb_ctx.params.num_slots
+    x = rng.uniform(-1, 1, nh)
+    fn = lambda t: np.sin(2 * np.pi * 1.5 * t) / (2 * np.pi)  # noqa: E731
+    coeffs = chebyshev_coeffs(fn, 15)
+    ct = cheb_ctx.encrypt(x)
+    tc = TraceContext(cheb_ctx.params)
+    h = tc.input("x", level=ct.level, scale=ct.scale)
+    tc.output(eval_chebyshev(tc, h, coeffs), "y")
+    return x, fn, coeffs, ct, compile_program(tc)
+
+
+def test_compiled_chebyshev_bitexact(cheb_ctx, cheb_case):
+    from repro.core.polyeval import eval_chebyshev
+
+    x, fn, coeffs, ct, comp = cheb_case
+    exp = eval_chebyshev(cheb_ctx, ct, coeffs)
+    got = ProgramExecutor(cheb_ctx).run(comp, {"x": ct})["y"]
+    assert _ct_equal(got, exp)
+    assert got.scale == exp.scale and got.level == exp.level
+    assert np.abs(cheb_ctx.decrypt(got).real - fn(x)).max() < 5e-3
+
+
+# ----------------------- vmap batching -----------------------------------
+
+def test_batched_matvec_bitexact(rctx, bsgs_case):
+    A, diags, z, ct = bsgs_case
+    rng = np.random.default_rng(17)
+    nh = rctx.params.num_slots
+    comp = compile_program(_trace_matvec(rctx.params, diags, bs=4))
+    ex = ProgramExecutor(rctx)
+    cts = [ct] + [
+        rctx.encrypt(rng.normal(size=nh) + 1j * rng.normal(size=nh))
+        for _ in range(2)
+    ]
+    outs = ex.run_batched(comp, {"x": cts})["y"]
+    assert len(outs) == 3
+    for cti, outi in zip(cts, outs):
+        ref = ex.run(comp, {"x": cti})["y"]
+        assert _ct_equal(outi, ref)
+        assert outi.scale == ref.scale
+
+
+def test_batched_one_trace_per_plan(cheb_ctx, cheb_case):
+    """Every batched plan (keyswitch_b / hoisted_b / ...) traces once:
+    re-running the batch is pure cache hits."""
+    x, fn, coeffs, ct, comp = cheb_case
+    ex = ProgramExecutor(cheb_ctx)
+    cts = [ct, ct]
+    ex.run_batched(comp, {"x": cts})
+    batched = {k: v for k, v in cheb_ctx.engine.trace_counts.items()
+               if str(k[0]).endswith("_b")}
+    assert batched, "batched plans must register trace events"
+    ex.run_batched(comp, {"x": cts})   # second run: no retrace
+    assert all(v == 1 for v in cheb_ctx.engine.trace_counts.values() if v)
+    assert {k: v for k, v in cheb_ctx.engine.trace_counts.items()
+            if str(k[0]).endswith("_b")} == batched
+
+
+# ------------------- predicted vs executed reconciliation ----------------
+
+def test_reconciliation_and_plan_shapes(rctx, bsgs_case):
+    A, diags, z, ct = bsgs_case
+    for fusion in (False, True):
+        comp = compile_program(_trace_matvec(rctx.params, diags, bs=4),
+                               fusion=fusion)
+        res = ProgramExecutor(rctx).run(comp, {"x": ct}, with_report=True)
+        rec = res.report.reconcile()
+        assert rec["counts_match"], rec
+        # word volumes: the hoist model's uniform-digit approximation vs
+        # the engine plans' true short last groups
+        assert abs(rec["bconv_ratio"] - 1.0) < 1e-9
+        assert abs(rec["ip_macs_ratio"] - 1.0) < 1e-9
+        assert 0.9 < rec["ntt_ratio"] < 1.15
+        assert res.report.validate_plan_shapes(rctx.params)
+
+
+def test_batched_report_scales_with_batch(rctx, bsgs_case):
+    A, diags, z, ct = bsgs_case
+    comp = compile_program(_trace_matvec(rctx.params, diags, bs=4))
+    ex = ProgramExecutor(rctx)
+    res = ex.run_batched(comp, {"x": [ct, ct]}, with_report=True)
+    rec = res.report.reconcile()
+    assert res.report.batch == 2
+    assert rec["counts_match"], rec
+
+
+def test_seed_path_report_reconciles(rctx, bsgs_case):
+    """use_engine=False has no digits sharing: the report predicts one
+    ModUp per hoisted block and still reconciles exactly."""
+    A, diags, z, ct = bsgs_case
+    comp = compile_program(_trace_matvec(rctx.params, diags, bs=4))
+    ex = ProgramExecutor(rctx)
+    rctx.use_engine = False
+    try:
+        res = ex.run(comp, {"x": ct}, with_report=True)
+    finally:
+        rctx.use_engine = True
+    rec = res.report.reconcile()
+    assert rec["counts_match"], rec
+    # one ModUp per hoisted block on the seed path: more than the
+    # engine-mode prediction, which shares digits per anchor
+    from repro.runtime.report import predicted_volumes
+
+    assert (res.report.predicted.modup_count
+            > predicted_volumes(comp, shared_modup=True).modup_count)
+
+
+def test_report_feeds_group_scheduler(rctx, bsgs_case):
+    from repro.sim import HE2_SM
+
+    A, diags, z, ct = bsgs_case
+    comp = compile_program(_trace_matvec(rctx.params, diags, bs=4))
+    res = ProgramExecutor(rctx).run(comp, {"x": ct}, with_report=True)
+    sched = res.report.scheduled_result(comp, HE2_SM, mode="pipelined")
+    assert sched.latency_s > 0
+    assert sched.timelines and set(sched.engine_busy_s)
+    analytic = res.report.scheduled_result(comp, HE2_SM, mode="analytic")
+    assert analytic.xpu_busy_s == pytest.approx(sched.xpu_busy_s)
+
+
+# ------------------- engine digits + counters plumbing -------------------
+
+def test_hoisted_digits_parity(rctx, bsgs_case):
+    """Precomputed-digits hoisted sum is bit-exact with the monolithic
+    one — the cross-block ModUp sharing changes no values."""
+    A, diags, z, ct = bsgs_case
+    steps = [1, 3, 7]
+    pts = [rctx.encode(np.real(diags[1]), level=ct.level) for _ in steps]
+    a = rctx.hoisted_rotation_sum(ct, steps, pts, rescale=False)
+    digits = rctx.hoist_digits(ct)
+    b = rctx.hoisted_rotation_sum(ct, steps, pts, rescale=False,
+                                  digits=digits)
+    assert _ct_equal(a, b)
+
+
+def test_counters_seed_engine_parity(rctx):
+    """Both dispatch paths tally identical op counts for the same ops."""
+    rng = np.random.default_rng(23)
+    nh = rctx.params.num_slots
+    z = rng.normal(size=nh)
+    ct = rctx.encrypt(z)
+    c = rctx.counters
+
+    def ops():
+        rctx.rotate(ct, 3)
+        rctx.multiply(ct, ct)
+        rctx.hoisted_rotation_sum(ct, [1, 2], None)
+
+    s0 = c.snapshot()
+    ops()
+    engine_counts = c.delta(s0)
+    rctx.use_engine = False
+    try:
+        s1 = c.snapshot()
+        ops()
+        seed_counts = c.delta(s1)
+    finally:
+        rctx.use_engine = True
+    assert engine_counts == seed_counts
+    assert engine_counts.modup == 3 and engine_counts.rotation == 3
+
+
+# ------------------- OpVolumes per-digit legs ----------------------------
+
+def test_modup_legs_match_totals():
+    from repro.dfg.hoist import modup_volumes
+
+    for l in (6, 7, 12):
+        v = modup_volumes(l, k=3, alpha=2, N=512)
+        assert len(v.modup_legs) == -(-l // 2)
+        assert sum(b for _, b in v.modup_legs) == v.modup_bconv_macs
+        both = v + v
+        assert len(both.modup_legs) == len(v.modup_legs)
+        assert both.modup_legs[0][0] == 2 * v.modup_legs[0][0]
+        assert v.scaled(2.0).modup_legs[0][1] == 2 * v.modup_legs[0][1]
+    # differing dnum blocks cannot keep a per-digit attribution
+    assert (modup_volumes(6, 3, 2, 512)
+            + modup_volumes(12, 3, 2, 512)).modup_legs == ()
