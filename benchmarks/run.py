@@ -15,9 +15,9 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        bench_keyswitch, bench_runtime, common, fig6_parallelism,
-        fig7_bsgs, fig14_ablation, fig15_hero, fig16_util,
-        fig17_sensitivity, table1_ai, table4_end2end,
+        bench_bootstrap, bench_keyswitch, bench_runtime, common,
+        fig6_parallelism, fig7_bsgs, fig14_ablation, fig15_hero,
+        fig16_util, fig17_sensitivity, table1_ai, table4_end2end,
     )
 
     modules = {
@@ -25,6 +25,7 @@ def main() -> None:
         "table4": table4_end2end,
         "keyswitch": bench_keyswitch,
         "runtime": bench_runtime,
+        "bootstrap": bench_bootstrap,
         "fig6": fig6_parallelism,
         "fig7": fig7_bsgs,
         "fig14": fig14_ablation,

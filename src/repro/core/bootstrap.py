@@ -10,17 +10,27 @@ slots in bit-reversed order, EvalMod is slot-wise (order-agnostic), and
 S2C (DIT direction) consumes bit-reversed input — the permutations cancel.
 
 Stages are merged into ``n_groups`` (default 3) dense products whose
-diagonals drive hoisted/BSGS homomorphic matvecs — these are precisely the
-PKBs of the paper's bootstrapping DFG.
+diagonals are evaluated as BSGS matvecs (shape-derived baby-step block
+size unless ``bsgs_bs`` overrides it) — these are precisely the serial
+PKB chains of the paper's bootstrapping DFG (Sec. IV).
+
+Every pipeline method only touches the context's public op API, so the
+same source runs EITHER eagerly on a ``CKKSContext`` OR symbolically
+under the compiled runtime's ``repro.runtime.compile.TraceContext``:
+:meth:`Bootstrapper.compile` traces the full ModRaise -> C2S -> re/im
+split -> EvalMod x2 -> merge -> S2C pipeline and lowers it through
+``repro.runtime`` (baby-step blocks share one ModUp per anchor; with
+``exact=False`` the giant-step rotations of each matvec close with ONE
+ModDown — see ``runtime.lower.MultiHoistedStep``).
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
-from repro.core import linear, poly
+from repro.core import linear
 from repro.core.ckks import CKKSContext, Ciphertext
-from repro.core.encoding import centered_crt
-from repro.core.keys import to_rns
 from repro.core.polyeval import chebyshev_coeffs, eval_chebyshev
 
 
@@ -105,9 +115,37 @@ def _group(mats: list[np.ndarray], n_groups: int) -> list[np.ndarray]:
     return out
 
 
+def auto_bsgs_bs(offsets, nh: int) -> int:
+    """Shape-derived baby-step block size for diagonal offsets.
+
+    The merged FFT stage matrices have diagonals at MULTIPLES of a gap
+    (the radix stride), so the d = i*bs + j split of Eq. (3) only
+    exposes shared baby steps when bs is a multiple of that stride: we
+    take bs = g * 2^floor(log2(sqrt(m))) where g = gcd of the (nonzero)
+    offsets and the slot count and m the diagonal count — the largest
+    power-of-two baby count not above sqrt(m), which minimizes
+    baby + giant rotations.  Returns 0 (dense single hoisted block) when
+    the matrix is too sparse for the split to expose any giant-step
+    structure."""
+    offs = [d % nh for d in offsets if d % nh]
+    if len(offsets) < 4 or not offs:
+        return 0
+    g = math.gcd(nh, *offs)
+    n_baby = 1 << (math.isqrt(len(offsets)).bit_length() - 1)
+    return g * n_baby if n_baby >= 2 else 0
+
+
 class Bootstrapper:
+    """``bsgs_bs``: baby-step block size for the stage matvecs.  ``None``
+    (default) derives it per matrix via :func:`auto_bsgs_bs`; ``0`` forces
+    the dense single-block ``matvec_diag`` path; any other value is used
+    as-is whenever the matrix's diagonal offsets span more than one
+    giant-step group (``d // bs``) — otherwise the split would expose no
+    giant-step structure and the dense path is taken."""
+
     def __init__(self, ctx: CKKSContext, n_groups: int = 3,
-                 mod_K: int = 6, cheb_degree: int = 40, bsgs_bs: int = 0):
+                 mod_K: int = 6, cheb_degree: int = 40,
+                 bsgs_bs: int | None = None):
         self.ctx = ctx
         enc = ctx.encoder
         nh = enc.Nh
@@ -142,38 +180,33 @@ class Bootstrapper:
     # ------------------------------------------------------------------
     def mod_raise(self, ct: Ciphertext) -> Ciphertext:
         """Lift a level-0 ciphertext to the full chain (exact, coeffs < q0)."""
-        ctx = self.ctx
-        p = ctx.params
-        assert ct.level == 0
-        base = (p.q_primes[0],)
-        full = p.q_chain(p.L)
-        out = []
-        for comp in (ct.c0, ct.c1):
-            coeff = poly.intt(comp, base, ctx.pc)
-            centered = centered_crt(np.asarray(coeff), base)
-            lifted = to_rns(centered.astype(np.int64), full)
-            out.append(poly.ntt(np.asarray(lifted), full, ctx.pc))
-        return Ciphertext(out[0], out[1], p.L, ct.scale)
+        return CKKSContext.mod_raise(self.ctx, ct)
 
-    def _matvec(self, ct: Ciphertext, mat: np.ndarray) -> Ciphertext:
+    def _matvec(self, ctx, ct: Ciphertext, mat: np.ndarray) -> Ciphertext:
         diags = linear.matrix_diagonals(mat)
-        if self.bsgs_bs and len(diags) > self.bsgs_bs:
-            return linear.matvec_bsgs(self.ctx, ct, diags, self.bsgs_bs)
-        return linear.matvec_diag(self.ctx, ct, diags)
+        bs = self.bsgs_bs
+        if bs is None:
+            bs = auto_bsgs_bs(sorted(diags), ctx.params.num_slots)
+        if bs and len({d // bs for d in diags}) > 1:
+            return linear.matvec_bsgs(ctx, ct, diags, bs)
+        return linear.matvec_diag(ctx, ct, diags)
 
-    def coeff_to_slot(self, ct: Ciphertext) -> Ciphertext:
+    def coeff_to_slot(self, ct: Ciphertext, ctx=None) -> Ciphertext:
+        ctx = self.ctx if ctx is None else ctx
         for g in self.c2s_groups:
-            ct = self._matvec(ct, g)
+            ct = self._matvec(ctx, ct, g)
         return ct
 
-    def slot_to_coeff(self, ct: Ciphertext) -> Ciphertext:
+    def slot_to_coeff(self, ct: Ciphertext, ctx=None) -> Ciphertext:
+        ctx = self.ctx if ctx is None else ctx
         for g in self.s2c_groups:
-            ct = self._matvec(ct, g)
+            ct = self._matvec(ctx, ct, g)
         return ct
 
-    def eval_mod(self, ct: Ciphertext, q0_over_scale: float) -> Ciphertext:
+    def eval_mod(self, ct: Ciphertext, q0_over_scale: float,
+                 ctx=None) -> Ciphertext:
         """EvalMod on real-valued slots: x = m/q0 + I -> ~m/q0."""
-        ctx = self.ctx
+        ctx = self.ctx if ctx is None else ctx
         nh = ctx.params.num_slots
         # normalize to [-1, 1]: u = x / K
         pre = ctx.encode(
@@ -186,15 +219,19 @@ class Bootstrapper:
         return ctx.pt_mul(out, post, rescale=True)
 
     # ------------------------------------------------------------------
-    def bootstrap(self, ct: Ciphertext) -> Ciphertext:
-        """Full pipeline.  Input at level 0, output at a higher level."""
-        ctx = self.ctx
+    def bootstrap(self, ct: Ciphertext, ctx=None) -> Ciphertext:
+        """Full pipeline.  Input at level 0, output at a higher level.
+
+        ``ctx`` defaults to the eager context; passing the runtime's
+        ``TraceContext`` records the same pipeline as a DFG instead (see
+        :meth:`compile`)."""
+        ctx = self.ctx if ctx is None else ctx
         p = ctx.params
         nh = p.num_slots
         q0 = p.q_primes[0]
 
-        raised = self.mod_raise(ct)
-        t = self.coeff_to_slot(raised)
+        raised = ctx.mod_raise(ct)
+        t = self.coeff_to_slot(raised, ctx)
 
         # split real/imag: re = (t + conj t)/2, im = (t - conj t)/(2i)
         tc = ctx.conjugate(t)
@@ -204,12 +241,36 @@ class Bootstrapper:
         im = ctx.pt_mul(ctx.sub(t, tc), mhalf_i, rescale=True)
 
         q0_over_scale = q0 / ct.scale
-        re_m = self.eval_mod(re, q0_over_scale)
-        im_m = self.eval_mod(im, q0_over_scale)
+        re_m = self.eval_mod(re, q0_over_scale, ctx)
+        im_m = self.eval_mod(im, q0_over_scale, ctx)
 
         lvl = min(re_m.level, im_m.level)
         i_pt = ctx.encode(np.full(nh, 1.0j), level=lvl, scale=1.0)
         im_i = ctx.pt_mul(ctx.level_down(im_m, lvl), i_pt, rescale=False)
         merged = ctx.add(ctx.level_down(re_m, lvl), im_i)
 
-        return self.slot_to_coeff(merged)
+        return self.slot_to_coeff(merged, ctx)
+
+    # ------------------------------------------------------------------
+    def compile(self, input_scale: float | None = None,
+                fusion: bool = False, exact: bool = True):
+        """Trace the full bootstrap pipeline and lower it through the
+        compiled runtime (``repro.runtime``).
+
+        The traced program takes one level-0 input tagged ``"ct"`` (its
+        scale must match ``input_scale``, default the params scale) and
+        produces one output tagged ``"out"``.  ``exact=True`` (default)
+        keeps the lowering bit-exact with :meth:`bootstrap`; ``exact=
+        False`` additionally lowers the multi-anchor giant-step PKBs of
+        every BSGS stage to single-ModDown blocks (numerically close but
+        not bit-identical — the accumulation crosses ModDown boundaries).
+        """
+        from repro.runtime import TraceContext, compile_program
+
+        params = self.ctx.params
+        scale = params.scale if input_scale is None else input_scale
+        tc = TraceContext(params)
+        h = tc.input("ct", level=0, scale=scale)
+        out = self.bootstrap(h, ctx=tc)
+        tc.output(out, "out")
+        return compile_program(tc, fusion=fusion, exact=exact)

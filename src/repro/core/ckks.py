@@ -170,6 +170,30 @@ class CKKSContext:
         n = target + 1
         return Ciphertext(ct.c0[:n], ct.c1[:n], target, ct.scale)
 
+    def mod_raise(self, ct: Ciphertext) -> Ciphertext:
+        """Lift a level-0 ciphertext to the full chain (exact, coeffs < q0).
+
+        The bootstrap boundary op: each component is brought to the
+        coefficient domain, centered-lifted off the q0 basis, and re-NTT'd
+        over the full chain — decrypting the result yields m + q0*I with
+        |I| bounded by the secret's hamming weight.  The compiled runtime
+        executes ``OpKind.MOD_RAISE`` nodes through this entry point.
+        """
+        from repro.core.encoding import centered_crt
+        from repro.core.keys import to_rns
+
+        p = self.params
+        assert ct.level == 0
+        base = (p.q_primes[0],)
+        full = p.q_chain(p.L)
+        out = []
+        for comp in (ct.c0, ct.c1):
+            coeff = poly.intt(comp, base, self.pc)
+            centered = centered_crt(np.asarray(coeff), base)
+            lifted = to_rns(centered.astype(np.int64), full)
+            out.append(poly.ntt(jnp.asarray(lifted), full, self.pc))
+        return Ciphertext(out[0], out[1], p.L, ct.scale)
+
     # ------------------------- keyswitch core --------------------------
     # The batched jit engine (repro.core.keyswitch) is the default hot
     # path; the seed per-digit loop methods below are retained as the
@@ -316,12 +340,48 @@ class CKKSContext:
         a single ModDown closes the block.  ``digits`` (from
         :meth:`hoist_digits`) skips even that ModUp — blocks sharing an
         anchor ciphertext share one ModUp program-wide.
+
+        Step-0 terms never touch the keyswitch machinery: Rot_0 is the
+        identity, so they contribute a plain (pt-mul'd) base-domain add —
+        one IP fewer per block, no identity-keyswitch noise, and the
+        same arithmetic whether the term appears alone (``ctx.pt_mul``)
+        or inside a block (which is what keeps the compiled runtime's
+        lowering bit-exact regardless of how the 0th diagonal lands).
         """
-        lvl = ct.level
         steps_norm = [s % self.params.num_slots for s in steps_list]
+        nz = [i for i, s in enumerate(steps_norm) if s != 0]
+        out = None
+        if nz:
+            nz_steps = [steps_norm[i] for i in nz]
+            nz_pts = [pts[i] for i in nz] if pts is not None else None
+            out = self._hoisted_block(ct, nz_steps, nz_pts, digits)
+        out = self.add_zero_step_terms(out, ct, steps_norm, pts)
+        if pts is not None and rescale:
+            out = self.rescale(out)
+        return out
+
+    def add_zero_step_terms(self, out, ct: Ciphertext, steps_norm, pts):
+        """Fold the identity (step-0) terms of a hoisted block into
+        ``out`` as plain base-domain EWOs.  Shared by the eager primitive
+        and the runtime's batched mirror (EWOs broadcast over a leading
+        ct axis) so the two step-0 paths cannot drift apart."""
+        for i, s in enumerate(steps_norm):
+            if s != 0:
+                continue
+            term = (self.pt_mul(ct, pts[i], rescale=False)
+                    if pts is not None else ct)
+            out = term if out is None else self.add(out, term)
+        return out
+
+    def _hoisted_block(
+        self, ct: Ciphertext, steps_list: list[int],
+        pts: list[Plaintext] | None, digits: jnp.ndarray | None,
+    ) -> Ciphertext:
+        """The keyswitch part of a hoisted block (nonzero steps only)."""
+        lvl = ct.level
         if self.use_engine:
-            gs = [self.pc.rns.galois_for_rotation(s) for s in steps_norm]
-            keys = [self.keys.rot_key(s) for s in steps_norm]
+            gs = [self.pc.rns.galois_for_rotation(s) for s in steps_list]
+            keys = [self.keys.rot_key(s) for s in steps_list]
             pm_ext = pm_base = pm_ext_m = None
             if pts is not None:
                 assert all(pt.level == lvl for pt in pts)
@@ -331,12 +391,10 @@ class CKKSContext:
                 digits=digits,
             )
             out_scale = ct.scale * (pts[0].scale if pts is not None else 1.0)
-            out = Ciphertext(c0, c1, lvl, out_scale)
-            if pts is not None and rescale:
-                out = self.rescale(out)
-            return out
+            return Ciphertext(c0, c1, lvl, out_scale)
         assert digits is None, "digits sharing requires the engine path"
-        return self._hoisted_rotation_sum_seed(ct, steps_norm, pts, rescale)
+        return self._hoisted_rotation_sum_seed(ct, steps_list, pts,
+                                               rescale=False)
 
     def _hoisted_rotation_sum_seed(
         self, ct: Ciphertext, steps_list: list[int],

@@ -442,6 +442,45 @@ class KeyswitchEngine:
             self._hoist_fns[key] = jax.jit(fn)
         return self._hoist_fns[key]
 
+    def _multi_core(self, plan: KeyswitchPlan, n: int, c0s, digits,
+                    perms, evk_all):
+        """Multi-anchor accumulation body: rotate each anchor's digits
+        by ITS perm, IP against ITS evk, accumulate every term in the
+        extended basis, and close with ONE batched ModDown."""
+        em = plan.ext_mods[None, :, None]
+        d_rot = jax.vmap(lambda d, p: d[:, :, p])(digits, perms)
+        if self.backend == "pallas":
+            acc = None
+            for r in range(n):
+                a0, a1 = fused_ip_mont(
+                    d_rot[r].astype(jnp.uint32), evk_all[r], None,
+                    plan.q32, plan.qneg32, interpret=self.interpret,
+                )
+                ipr = jnp.stack([a0, a1]).astype(jnp.uint64)
+                acc = ipr if acc is None else (acc + ipr) % em
+        else:
+            prod = (d_rot[:, :, None] * evk_all) % em[None, None]
+            ip = prod.sum(axis=1) % em[None]   # (n, 2, l_ext, N)
+            acc = ip.sum(axis=0) % em
+        bm = plan.base_mods[:, None]
+        c0r = jax.vmap(lambda c, p: c[:, p])(c0s, perms)   # (n, l, N)
+        base0 = c0r.sum(axis=0) % bm
+        d = self._moddown2(acc, plan)
+        return (base0 + d[0]) % bm, d[1]
+
+    def _multi_fn(self, level: int, n: int):
+        key = ("multi", level, n)
+        if key not in self._hoist_fns:
+            plan = self._plan(level)
+
+            def fn(c0s, digits, perms, evk_all):
+                self._count_trace(("multi_hoisted", level, n))
+                return self._multi_core(plan, n, c0s, digits, perms,
+                                        evk_all)
+
+            self._hoist_fns[key] = jax.jit(fn)
+        return self._hoist_fns[key]
+
     def _modup_fn(self, level: int):
         if level not in self._modup_fns:
             plan = self._plan(level)
@@ -529,6 +568,23 @@ class KeyswitchEngine:
         return self._batched_fn(
             ("hoisted_b", level, n_rot, with_pt, digits_in), make)
 
+    def _multi_batched_fn(self, level: int, n: int):
+        plan = self._plan(level)
+
+        def make():
+            def fn(c0s, digits, perms, evk_all):
+                self._count_trace(("multi_hoisted_b", level, n))
+
+                def one(c0s_1, digits_1):
+                    return self._multi_core(plan, n, c0s_1, digits_1,
+                                            perms, evk_all)
+
+                return jax.vmap(one, in_axes=(1, 1))(c0s, digits)
+
+            return fn
+
+        return self._batched_fn(("multi_hoisted_b", level, n), make)
+
     def _modup_batched_fn(self, level: int):
         plan = self._plan(level)
 
@@ -590,6 +646,32 @@ class KeyswitchEngine:
         fn = self._hoist_fn(level, len(galois_list), with_pt)
         return fn(c0, c1, perms, evk_all, pm_ext, pm_base, pm_ext_mont)
 
+    def multi_hoisted_rotation_sum(self, c0s, digits_list, galois_list,
+                                   evks, level: int):
+        """sum_i Rot_{g_i}(ct_i) over DIFFERENT anchor ciphertexts with
+        ONE ModDown (``runtime.lower.MultiHoistedStep``).
+
+        ``c0s``/``digits_list``: per-term c0 polynomials and pre-computed
+        ModUp digits (from :meth:`modup` — each anchor pays its own
+        ModUp, shared with sibling hoisted blocks via the runtime's
+        digits cache).  Per-term IPs accumulate in the extended basis;
+        a single batched ModDown closes the sum — numerically close to,
+        but not bit-identical with, per-rotation keyswitches (the
+        approximate-FBC rounding of the merged ModDowns differs).
+        """
+        plan = self._plan(level)
+        n = len(galois_list)
+        c = self.counters
+        c.note_ip(plan.dnum, plan.l_ext, plan.N, n)
+        c.note_moddown(plan.l, plan.k, plan.N)
+        c.keyswitch += n
+        c.rotation += n
+        perms = self.perm_tensor(galois_list)
+        evk_all = self.evk_group_tensor(evks, level)
+        return self._multi_fn(level, n)(
+            jnp.stack(c0s), jnp.stack(digits_list), perms, evk_all
+        )
+
     # -------- batched public API (leading ct axis, jnp backend) --------
     def keyswitch_batched(self, ab, evk: EvalKey, level: int):
         """Batched keyswitch of (B, l, N) polys through ONE jit trace."""
@@ -614,6 +696,25 @@ class KeyswitchEngine:
         self.counters.note_modup(plan.l, plan.l_ext, plan_sizes, plan.N,
                                  m=int(ab.shape[0]))
         return self._modup_batched_fn(level)(ab)
+
+    def multi_hoisted_rotation_sum_batched(self, c0s, digits_list,
+                                           galois_list, evks, level: int):
+        """Batched multi-anchor accumulation: per-term (B, l, N) c0s and
+        (B, dnum, l_ext, N) digits, vmapped over the ct axis."""
+        self._require_jnp("multi_hoisted_rotation_sum")
+        plan = self._plan(level)
+        n = len(galois_list)
+        m = int(c0s[0].shape[0])
+        c = self.counters
+        c.note_ip(plan.dnum, plan.l_ext, plan.N, n, m)
+        c.note_moddown(plan.l, plan.k, plan.N, m)
+        c.keyswitch += m * n
+        c.rotation += m * n
+        perms = self.perm_tensor(galois_list)
+        evk_all = self.evk_group_tensor(evks, level)
+        return self._multi_batched_fn(level, n)(
+            jnp.stack(c0s), jnp.stack(digits_list), perms, evk_all
+        )
 
     def hoisted_rotation_sum_batched(self, c0b, c1b, galois_list,
                                      evks, level: int, pm_ext=None,

@@ -12,7 +12,11 @@ All helpers take the context as a parameter and only use its public op
 API (encode/pt_mul/multiply/double/level_down/...), so they run
 unchanged against either the functional ``CKKSContext`` or the
 runtime's symbolic ``repro.runtime.compile.TraceContext`` — the same
-source compiles through the DFG runtime and executes eagerly.
+source compiles through the DFG runtime and executes eagerly.  The
+compiled bootstrap (``core.bootstrap.Bootstrapper.compile``) traces the
+two EvalMod Chebyshev branches through here; every ``mul_const`` /
+``align`` scale decision is recorded on the nodes and replayed by the
+executor, which is what keeps that pipeline bit-exact end to end.
 """
 from __future__ import annotations
 

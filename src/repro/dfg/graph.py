@@ -31,6 +31,7 @@ class OpKind(enum.Enum):
     PADD = "padd"
     RESCALE = "rescale"
     LEVEL_DOWN = "level_down"   # drop limbs without scale change
+    MOD_RAISE = "mod_raise"     # bootstrap boundary: level 0 -> full chain
     AUTOM = "autom"        # automorphism (permutation)
     # --- composite ops (pre-lowering) ---
     ROT = "rot"            # rotation keyswitch (expands to autom+ks chain)

@@ -6,13 +6,19 @@ minimized expansion -> fusion DP -> dataflow mapping) drives the
 the *functional* runtime:
 
   trace   (compile.TraceContext)  — run unmodified program code
-          (``core.linear`` matvec/BSGS, ``core.polyeval`` Chebyshev)
-          against a symbolic context that mirrors ``CKKSContext`` and
-          records a ``dfg.trace.ProgramBuilder`` graph, the same IR the
+          (``core.linear`` matvec/BSGS, ``core.polyeval`` Chebyshev,
+          ``core.bootstrap`` C2S/EvalMod/S2C) against a symbolic context
+          that mirrors ``CKKSContext`` (add/sub/double, pt_add/pt_mul,
+          multiply, rotate/conjugate, hoisted_rotation_sum, rescale/
+          level_down/mod_raise — emitting CADD/CSUB/CSCALE/PADD/PMUL/
+          CMULT/ROT/CONJ/RESCALE/LEVEL_DOWN/MOD_RAISE nodes) and records
+          a ``dfg.trace.ProgramBuilder`` graph, the same IR the
           simulator consumes;
   compile (compile.compile_program) — identify PKBs, optionally run the
           ``dfg.fusion.optimal_fusion`` DP, and lower (lower.py) fused
           plans to hoisted-rotation-sum blocks + eager engine EWOs;
+          ``exact=False`` additionally lowers multi-anchor giant-step
+          PKBs to single-ModDown accumulation blocks;
   execute (exec.ProgramExecutor)  — run the lowered plan on a real
           ``CKKSContext``/``KeyswitchEngine``, sharing one ModUp across
           every block anchored on the same ciphertext, and batching

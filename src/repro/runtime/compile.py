@@ -1,14 +1,20 @@
 """Symbolic tracing + compilation front-end for the CKKS runtime.
 
 ``TraceContext`` mirrors the op surface of ``repro.core.ckks.CKKSContext``
-(encode / pt_mul / multiply / rotate / hoisted_rotation_sum / rescale /
-level_down / ...) but records a ``dfg.trace.ProgramBuilder`` graph — the
-same IR the simulator consumes — instead of computing.  Unmodified
-program code (``core.linear.matvec_diag``/``matvec_bsgs``,
-``core.polyeval.eval_chebyshev``) therefore runs EITHER eagerly or under
-the tracer; every level/scale decision the eager code makes is replayed
-symbolically and baked into node attributes, which is what keeps the
-compiled execution bit-exact with the eager path.
+(encode / pt_add / pt_mul / add / sub / double / multiply / square /
+rotate / conjugate / hoisted_rotation_sum / rescale / level_down /
+mod_raise) but records a ``dfg.trace.ProgramBuilder`` graph — the same
+IR the simulator consumes — instead of computing.  Plaintexts are
+recorded as level/scale-parameterized ``PtSpec``s (the raw slot values
+plus the exact encode parameters the eager path would use), and
+``mod_raise`` becomes an opaque ``OpKind.MOD_RAISE`` boundary node the
+executor replays via ``CKKSContext.mod_raise``.  Unmodified program
+code (``core.linear.matvec_diag``/``matvec_bsgs``,
+``core.polyeval.eval_chebyshev``, ``core.bootstrap.Bootstrapper``)
+therefore runs EITHER eagerly or under the tracer; every level/scale
+decision the eager code makes is replayed symbolically and baked into
+node attributes, which is what keeps the compiled execution bit-exact
+with the eager path.
 
 ``compile_program`` then runs PKB identification and (optionally) the
 HERO fusion DP over the traced graph and lowers the plan to executable
@@ -153,6 +159,16 @@ class TraceContext:
         return self._emit(OpKind.LEVEL_DOWN, (ct.nid,), target, ct.scale,
                           target=target)
 
+    def mod_raise(self, ct: TraceHandle) -> TraceHandle:
+        """Bootstrap boundary: an opaque node lifting level 0 -> L.
+
+        The centered-CRT lift has no symbolic form; the executor replays
+        it via ``CKKSContext.mod_raise`` (scale is preserved, the level
+        jumps to the top of the chain)."""
+        assert ct.level == 0, "mod_raise consumes a level-0 ciphertext"
+        return self._emit(OpKind.MOD_RAISE, (ct.nid,), self.params.L,
+                          ct.scale)
+
     # ------------------------- mult / rotate ---------------------------
     def multiply(self, a: TraceHandle, b: TraceHandle,
                  rescale: bool = True) -> TraceHandle:
@@ -229,6 +245,7 @@ class CompiledProgram:
     pkbs: list
     fusion_plan: object | None
     fused: bool
+    exact: bool = True
 
     @property
     def n_hoisted(self) -> int:
@@ -237,27 +254,41 @@ class CompiledProgram:
         return sum(1 for s in self.steps if isinstance(s, HoistedStep))
 
     @property
+    def n_multi(self) -> int:
+        from repro.runtime.lower import MultiHoistedStep
+
+        return sum(1 for s in self.steps
+                   if isinstance(s, MultiHoistedStep))
+
+    @property
     def n_eager(self) -> int:
-        return len(self.steps) - self.n_hoisted
+        return len(self.steps) - self.n_hoisted - self.n_multi
 
     def summary(self) -> dict:
-        from repro.runtime.lower import HoistedStep
+        from repro.runtime.lower import HoistedStep, MultiHoistedStep
 
         hoisted = [s for s in self.steps if isinstance(s, HoistedStep)]
+        multi = [s for s in self.steps if isinstance(s, MultiHoistedStep)]
         return {
             "nodes": len(self.dfg.nodes),
             "pkbs": len(self.pkbs),
             "fused": self.fused,
+            "exact": self.exact,
             "hoisted_steps": len(hoisted),
+            "multi_anchor_steps": len(multi),
             "shared_modups": sum(1 for s in hoisted if not s.fresh_modup),
             "eager_steps": self.n_eager,
-            "predicted_modups": sum(1 for s in hoisted if s.fresh_modup),
+            "predicted_modups": (
+                sum(1 for s in hoisted if s.fresh_modup)
+                + sum(len(s.fresh_anchors) for s in multi)
+            ),
         }
 
 
 def compile_program(tc: TraceContext, fusion: bool = False,
                     capacity_words: float | None = None,
-                    max_group: int = 4) -> CompiledProgram:
+                    max_group: int = 4,
+                    exact: bool = True) -> CompiledProgram:
     """Lower a traced program onto the keyswitch engine.
 
     fusion=False (default) guarantees bit-exactness with the eager path:
@@ -267,8 +298,17 @@ def compile_program(tc: TraceContext, fusion: bool = False,
     hoisted blocks with pairwise-summed steps and combined plaintexts —
     numerically equivalent, not bit-identical (different evk
     trajectories), and strictly fewer ModUps/ModDowns.
+
+    exact=False additionally lowers multi-anchor PKBs (the giant-step
+    phase of BSGS, whose rotations consume different ciphertexts) to
+    ``lower.MultiHoistedStep`` blocks: per-rotation IPs accumulate in
+    the extended basis and ONE ModDown closes the whole sum, instead of
+    one ModDown per giant rotation.  Numerically close but not
+    bit-identical (the approximate-FBC rounding of the merged ModDowns
+    differs); see ``tests/test_runtime_bootstrap.py`` for the measured
+    error bound.
     """
     from repro.runtime.lower import lower_program
 
     return lower_program(tc, fusion=fusion, capacity_words=capacity_words,
-                         max_group=max_group)
+                         max_group=max_group, exact=exact)

@@ -28,7 +28,7 @@ from repro.core import poly
 from repro.core.ckks import CKKSContext, Ciphertext, Plaintext
 from repro.dfg.graph import OpKind
 from repro.runtime.compile import CompiledProgram
-from repro.runtime.lower import EagerStep, HoistedStep
+from repro.runtime.lower import EagerStep, HoistedStep, MultiHoistedStep
 
 
 @dataclasses.dataclass
@@ -121,6 +121,8 @@ class ProgramExecutor:
         for step in compiled.steps:
             if isinstance(step, HoistedStep):
                 self._exec_hoisted(compiled, step, values, digits, batch)
+            elif isinstance(step, MultiHoistedStep):
+                self._exec_multi(compiled, step, values, digits, batch)
             else:
                 self._exec_eager(compiled, step, values, outputs, inputs,
                                  batch)
@@ -145,7 +147,7 @@ class ProgramExecutor:
         if step.pt_terms is not None:
             pts = [self._step_pt(compiled, step, s) for s in step.steps]
         dig = None
-        if ctx.use_engine:
+        if ctx.use_engine and any(s != 0 for s in step.steps):
             dig = digits.get(step.anchor)
             if dig is None:
                 dig = (ctx.engine.modup_batched(ct.c1, lvl) if batch
@@ -159,20 +161,63 @@ class ProgramExecutor:
         self._finish(compiled, step.out, out, values)
 
     def _hoisted_batched(self, ct, step: HoistedStep, pts, dig):
-        """Batched mirror of ``CKKSContext.hoisted_rotation_sum``."""
+        """Batched mirror of ``CKKSContext.hoisted_rotation_sum`` —
+        including its step-0 split (identity terms are plain EWOs, never
+        keyswitches)."""
         ctx = self.ctx
         lvl = ct.level
-        gs = [ctx.pc.rns.galois_for_rotation(s) for s in step.steps]
-        keys = [ctx.keys.rot_key(s) for s in step.steps]
-        pm_ext = pm_base = pm_ext_m = None
-        if pts is not None:
-            pm_ext, pm_base, pm_ext_m = ctx._pm_stack(tuple(pts), lvl)
-        c0, c1 = ctx.engine.hoisted_rotation_sum_batched(
-            ct.c0, ct.c1, gs, keys, lvl, pm_ext, pm_base, pm_ext_m,
-            digits=dig,
-        )
-        scale = ct.scale * (pts[0].scale if pts is not None else 1.0)
-        return Ciphertext(c0, c1, lvl, scale)
+        nz = [i for i, s in enumerate(step.steps) if s != 0]
+        out = None
+        if nz:
+            nz_steps = [step.steps[i] for i in nz]
+            nz_pts = [pts[i] for i in nz] if pts is not None else None
+            gs = [ctx.pc.rns.galois_for_rotation(s) for s in nz_steps]
+            keys = [ctx.keys.rot_key(s) for s in nz_steps]
+            pm_ext = pm_base = pm_ext_m = None
+            if nz_pts is not None:
+                pm_ext, pm_base, pm_ext_m = ctx._pm_stack(tuple(nz_pts),
+                                                          lvl)
+            c0, c1 = ctx.engine.hoisted_rotation_sum_batched(
+                ct.c0, ct.c1, gs, keys, lvl, pm_ext, pm_base, pm_ext_m,
+                digits=dig,
+            )
+            scale = ct.scale * (nz_pts[0].scale if nz_pts is not None
+                                else 1.0)
+            out = Ciphertext(c0, c1, lvl, scale)
+        return ctx.add_zero_step_terms(out, ct, step.steps, pts)
+
+    def _exec_multi(self, compiled, step: MultiHoistedStep, values,
+                    digits, batch: int) -> None:
+        """Multi-anchor accumulation: one ModUp per (uncached) anchor,
+        per-term IPs summed in the extended basis, ONE ModDown."""
+        ctx = self.ctx
+        if not ctx.use_engine:
+            raise NotImplementedError(
+                "exact=False multi-anchor steps require the engine path")
+        lvl = step.level
+        c0s, digs, gs, keys = [], [], [], []
+        for anchor, s in step.rot_terms:
+            ct = values[anchor]
+            assert ct.level == lvl, "anchor level drifted from the trace"
+            dig = digits.get(anchor)
+            if dig is None:
+                dig = (ctx.engine.modup_batched(ct.c1, lvl) if batch
+                       else ctx.hoist_digits(ct))
+                digits[anchor] = dig
+            c0s.append(ct.c0)
+            digs.append(dig)
+            gs.append(ctx.pc.rns.galois_for_rotation(s))
+            keys.append(ctx.keys.rot_key(s))
+        if batch:
+            c0, c1 = ctx.engine.multi_hoisted_rotation_sum_batched(
+                c0s, digs, gs, keys, lvl)
+        else:
+            c0, c1 = ctx.engine.multi_hoisted_rotation_sum(
+                c0s, digs, gs, keys, lvl)
+        out = Ciphertext(c0, c1, lvl, values[step.rot_terms[0][0]].scale)
+        for anchor in step.passthrough:
+            out = ctx.add(out, values[anchor])
+        self._finish(compiled, step.out, out, values)
 
     def _step_pt(self, compiled, step: HoistedStep, s: int) -> Plaintext:
         """The (possibly fused) plaintext multiplying Rot_s(anchor)."""
@@ -238,6 +283,8 @@ class ProgramExecutor:
             out = ctx.pt_add(a, self._node_pt(compiled, node))
         elif op == OpKind.RESCALE:
             out = self._rescale(a, batch)
+        elif op == OpKind.MOD_RAISE:
+            out = self._mod_raise(a, batch)
         elif op == OpKind.LEVEL_DOWN:
             n = node.attrs["target"] + 1
             out = Ciphertext(a.c0[..., :n, :], a.c1[..., :n, :],
@@ -287,6 +334,19 @@ class ProgramExecutor:
         e0, e1 = ctx.engine.keyswitch_batched(d2, ctx.keys.mult_key, lvl)
         return Ciphertext(poly.add(d0, e0, mods), poly.add(d1, e1, mods),
                           lvl, a.scale * b.scale)
+
+    def _mod_raise(self, ct, batch: int) -> Ciphertext:
+        """Bootstrap boundary (centered-CRT lift, numpy object math) —
+        executed per ciphertext even under batching."""
+        ctx = self.ctx
+        if not batch:
+            return ctx.mod_raise(ct)
+        outs = [ctx.mod_raise(Ciphertext(ct.c0[b], ct.c1[b], ct.level,
+                                         ct.scale))
+                for b in range(int(ct.c0.shape[0]))]
+        return Ciphertext(jnp.stack([o.c0 for o in outs]),
+                          jnp.stack([o.c1 for o in outs]),
+                          outs[0].level, ct.scale)
 
     def _rescale(self, ct, batch: int) -> Ciphertext:
         ctx = self.ctx

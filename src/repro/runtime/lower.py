@@ -10,10 +10,13 @@ using Rot_a(Rot_b(x)) = Rot_{a+b}(x) and Rot_s(pt * x) =
 roll(pt, -s) * Rot_s(x) (Eq. (4) of the paper).  A lifted sink lowers to
 ONE ``hoisted_rotation_sum`` engine invocation; sinks sharing an anchor
 ciphertext share one ModUp (cross-block double hoisting).  Anything that
-does not lift — multi-anchor PKBs (e.g. the giant-step blocks of BSGS,
-whose rotations consume different ciphertexts), PAdds inside a region,
-CMult chains — falls back to eager per-op execution, which keeps the
-compiled path bit-exact with the eager one by construction.
+does not lift — PAdds inside a region, CMult chains — falls back to
+eager per-op execution, which keeps the compiled path bit-exact with
+the eager one by construction.  Multi-anchor PKBs (the giant-step
+blocks of BSGS, whose rotations consume different ciphertexts) stay
+eager under ``exact=True``; with ``exact=False`` they lower to
+``MultiHoistedStep``s that accumulate every rotation's IP in the
+extended basis and close the sum with ONE ModDown.
 
 With ``fusion=True`` the lift is allowed to recurse across the members
 of an ``optimal_fusion`` group, composing serial PKBs into one block
@@ -56,6 +59,38 @@ class HoistedStep:
     @property
     def n_rot(self) -> int:
         return len(self.steps)
+
+
+@dataclasses.dataclass
+class MultiHoistedStep:
+    """One multi-anchor accumulation closed by a SINGLE ModDown.
+
+    ``sink = sum_i Rot_{s_i}(anchor_i) [+ sum_j passthrough_j]`` where
+    the rotations consume DIFFERENT anchor ciphertexts (the giant-step
+    phase of BSGS).  Each anchor still needs its own ModUp (shared with
+    any sibling hoisted block via the program-wide digits cache), but
+    the per-rotation IP results accumulate in the extended basis and
+    ONE ModDown closes the whole sum — versus one ModDown per rotation
+    on the eager path.  Trades bit-exactness for the ModDown saving
+    (``exact=False`` lowering only): the approximate-FBC rounding of the
+    merged ModDowns differs from the per-rotation trajectory.
+    """
+
+    out: int
+    level: int
+    rot_terms: list[tuple[int, int]]        # (anchor nid, step != 0)
+    passthrough: list[int]                  # anchors added unrotated
+    # anchors whose ModUp this step performs (not already cached when
+    # the step runs); filled in program order by ``lower_program``
+    fresh_anchors: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_rot(self) -> int:
+        return len(self.rot_terms)
+
+    @property
+    def steps(self) -> list[int]:
+        return [s for _, s in self.rot_terms]
 
 
 @dataclasses.dataclass
@@ -154,6 +189,83 @@ def _build_step(dfg, sink: int, anchor: int, terms: dict[Term, float],
     )
 
 
+def _lift_multi(dfg, sink: int, interior: set[int], allowed_rots: set[int],
+                nh: int) -> tuple[dict[tuple[int, int], float], set[int]]:
+    """Rewrite ``sink`` as sum_i c_i * Rot_{s_i}(anchor_i) over SEVERAL
+    anchors.  Anchors are discovered dynamically: any node outside the
+    PKB's ``interior`` (region + rotations) terminates the walk as a
+    term anchor — this covers both true ModUp anchors and step-0
+    passthrough values (e.g. the unrotated first giant-step group of
+    BSGS).  Returns ({(anchor, step): coeff}, visited interior nodes);
+    raises Unliftable at an in-region op with no rotation-sum form
+    (plaintext factors stay on the single-anchor path)."""
+    memo: dict[int, dict[tuple[int, int], float]] = {}
+    visited: set[int] = set()
+
+    def ev(nid: int) -> dict[tuple[int, int], float]:
+        if nid != sink and nid not in interior:
+            return {(nid, 0): 1.0}
+        if nid in memo:
+            return memo[nid]
+        node = dfg.nodes[nid]
+        if node.op == OpKind.ROT and nid in allowed_rots:
+            s = node.attrs["steps"] % nh
+            out: dict[tuple[int, int], float] = {}
+            for (a, t), c in ev(node.args[0]).items():
+                key = (a, (t + s) % nh)
+                out[key] = out.get(key, 0.0) + c
+        elif node.op in (OpKind.CADD, OpKind.CSUB):
+            out = dict(ev(node.args[0]))
+            sign = -1.0 if node.op == OpKind.CSUB else 1.0
+            for k, c in ev(node.args[1]).items():
+                out[k] = out.get(k, 0.0) + sign * c
+        elif node.op == OpKind.CSCALE:
+            c0 = float(node.attrs.get("c", 2))
+            out = {k: c * c0 for k, c in ev(node.args[0]).items()}
+        else:
+            raise Unliftable(f"node {nid} ({node.op.value}) blocks "
+                             f"multi-anchor hoisting")
+        memo[nid] = out
+        visited.add(nid)
+        return out
+
+    return ev(sink), visited
+
+
+def _lower_multi(dfg, pkb: PKB,
+                 nh: int) -> tuple[list[MultiHoistedStep], set[int]]:
+    """Lower one multi-anchor PKB (giant-step shape) to single-ModDown
+    accumulation steps.  Only pure rotation sums with unit coefficients
+    over same-level anchors lift; anything else stays eager."""
+    interior = pkb.region | set(pkb.rotations)
+    allowed = set(pkb.rotations)
+    out_steps: list[MultiHoistedStep] = []
+    consumed: set[int] = set()
+    for sink in sorted(pkb.out_sinks):
+        terms, visited = _lift_multi(dfg, sink, interior, allowed, nh)
+        terms = {k: c for k, c in terms.items() if c != 0.0}
+        if any(c != 1.0 for c in terms.values()):
+            raise Unliftable("scaled multi-anchor term")
+        rot_terms = sorted((a, s) for (a, s) in terms if s != 0)
+        passthrough = sorted(a for (a, s) in terms if s == 0)
+        if len(rot_terms) < 2 or len({a for a, _ in rot_terms}) < 2:
+            raise Unliftable("no multi-anchor rotation work")
+        anchor_limbs = ({dfg.nodes[a].limbs for a, _ in rot_terms}
+                        | {dfg.nodes[a].limbs for a in passthrough})
+        if anchor_limbs != {dfg.nodes[sink].limbs}:
+            raise Unliftable("anchors at differing levels")
+        inner = visited - {sink}
+        for nid in inner:             # conservative: no escaping values
+            if dfg.succs(nid) - visited:
+                raise Unliftable("interior value escapes the region")
+        out_steps.append(MultiHoistedStep(
+            out=sink, level=dfg.nodes[sink].limbs - 1,
+            rot_terms=rot_terms, passthrough=passthrough,
+        ))
+        consumed |= inner
+    return out_steps, consumed
+
+
 _DESCEND = {OpKind.CADD, OpKind.CSUB, OpKind.CSCALE, OpKind.PMUL,
             OpKind.PADD}
 
@@ -172,9 +284,19 @@ def _lower_group(dfg, members: list[PKB], nh: int, pt_specs,
 
     Raises Unliftable only when nothing in the group lifts."""
     first, last = members[0], members[-1]
-    if len(first.in_anchors) != 1:
-        raise Unliftable("multi-anchor PKB")
-    anchor = next(iter(first.in_anchors))
+    if len(first.in_anchors) == 1:
+        anchor = next(iter(first.in_anchors))
+    else:
+        # in_anchors walks backward through commutative EWOs and may
+        # look THROUGH the value the rotations actually consume (e.g.
+        # the re/im merge CAdd feeding SlotToCoeff).  When every
+        # rotation reads the same direct argument, that argument is the
+        # anchor; true multi-anchor blocks (BSGS giant steps) have
+        # differing arguments and stay on the multi/eager path.
+        args = {dfg.nodes[r].args[0] for r in first.rotations}
+        if len(args) != 1:
+            raise Unliftable("multi-anchor PKB")
+        anchor = next(iter(args))
     anchor_level = dfg.nodes[anchor].limbs - 1
     allowed = set()
     for m in members:
@@ -222,7 +344,7 @@ def _lower_group(dfg, members: list[PKB], nh: int, pt_specs,
 
 def lower_program(tc: TraceContext, fusion: bool = False,
                   capacity_words: float | None = None,
-                  max_group: int = 4) -> CompiledProgram:
+                  max_group: int = 4, exact: bool = True) -> CompiledProgram:
     params = tc.params
     dfg = tc.g
     nh = params.num_slots
@@ -240,12 +362,14 @@ def lower_program(tc: TraceContext, fusion: bool = False,
         groups = [[i] for i in range(len(pkbs))]
 
     hoisted: dict[int, HoistedStep] = {}      # out nid -> step
+    multi: dict[int, MultiHoistedStep] = {}
     consumed: set[int] = set()
     for group in groups:
         members = [pkbs[i] for i in group]
         tries = [members] if len(members) == 1 else [members] + [
             [m] for m in members
         ]
+        lowered: set[int] = set()             # id() of lowered members
         for attempt in tries:
             try:
                 steps, interior = _lower_group(
@@ -257,20 +381,44 @@ def lower_program(tc: TraceContext, fusion: bool = False,
             for st in steps:
                 hoisted[st.out] = st
             consumed |= interior
+            lowered.update(id(m) for m in attempt)
             if attempt is members:
                 break
-        # a member that lowered nowhere simply executes eagerly
+        # members that lowered nowhere: multi-anchor accumulation when
+        # bit-exactness was waived, plain eager execution otherwise
+        if not exact:
+            for m in members:
+                if id(m) in lowered:
+                    continue
+                try:
+                    msteps, interior = _lower_multi(dfg, m, nh)
+                except Unliftable:
+                    continue
+                for st in msteps:
+                    multi[st.out] = st
+                consumed |= interior
 
-    # Order steps along the topo order; first hoisted step per anchor
-    # performs the (shared) ModUp.
+    # Order steps along the topo order; the first (multi-)hoisted step
+    # touching an anchor performs its (shared) ModUp.
     steps: list = []
     seen_anchor: set[int] = set()
     for nid in dfg.topo_order():
         if nid in hoisted:
             st = hoisted[nid]
-            st.fresh_modup = st.anchor not in seen_anchor
-            seen_anchor.add(st.anchor)
+            # a step with only identity terms never keyswitches, so it
+            # neither performs nor claims the anchor's shared ModUp
+            has_ks = any(s != 0 for s in st.steps)
+            st.fresh_modup = has_ks and st.anchor not in seen_anchor
+            if has_ks:
+                seen_anchor.add(st.anchor)
             steps.append(st)
+        elif nid in multi:
+            mst = multi[nid]
+            term_anchors = list(dict.fromkeys(a for a, _ in mst.rot_terms))
+            mst.fresh_anchors = [a for a in term_anchors
+                                 if a not in seen_anchor]
+            seen_anchor.update(term_anchors)
+            steps.append(mst)
         elif nid in consumed:
             continue
         else:
@@ -279,5 +427,5 @@ def lower_program(tc: TraceContext, fusion: bool = False,
     return CompiledProgram(
         params=params, dfg=dfg, pt_specs=tc.pt_specs, inputs=dict(tc.inputs),
         outputs=dict(tc.outputs), steps=steps, pkbs=pkbs, fusion_plan=plan,
-        fused=fusion,
+        fused=fusion, exact=exact,
     )

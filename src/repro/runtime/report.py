@@ -19,7 +19,7 @@ from repro.dfg.hoist import (
     OpVolumes, evk_words, ip_volumes, moddown_volumes, modup_volumes,
 )
 from repro.runtime.compile import CompiledProgram
-from repro.runtime.lower import HoistedStep
+from repro.runtime.lower import HoistedStep, MultiHoistedStep
 
 
 def _keyswitch_volumes(l: int, k: int, alpha: int, N: int,
@@ -47,8 +47,33 @@ def step_volumes(compiled: CompiledProgram, step,
     if isinstance(step, HoistedStep):
         l = step.level + 1
         fresh = step.fresh_modup or not shared_modup
+        # step-0 terms are plain base-domain EWOs (no IP, no evk) — see
+        # CKKSContext.hoisted_rotation_sum
+        nz = [s for s in step.steps if s != 0]
+        if not nz:
+            v = OpVolumes()
+            v.ewo_words = len(step.steps) * 2 * l * N
+            return v
         v = OpVolumes()
         if fresh:
+            v = v + modup_volumes(l, k, alpha, N)
+        v = v + moddown_volumes(l, k, alpha, N, 2)
+        for _ in range(len(nz)):
+            v = v + ip_volumes(l, k, alpha, N)
+        v.keyswitch_count = len(nz)
+        v.evk_set_words = len(set(nz)) * evk_words(l, k, alpha, N)
+        v.ewo_words = (len(step.steps) - len(nz)) * 2 * l * N
+        dnum = -(-l // alpha)
+        if fresh:
+            v.comm_up_words = dnum * (l + k) * N
+        v.comm_down_words = 2 * (l + k) * N
+        return v
+    if isinstance(step, MultiHoistedStep):
+        l = step.level + 1
+        v = OpVolumes()
+        fresh = (len(step.fresh_anchors) if shared_modup
+                 else len({a for a, _ in step.rot_terms}))
+        for _ in range(fresh):
             v = v + modup_volumes(l, k, alpha, N)
         v = v + moddown_volumes(l, k, alpha, N, 2)
         for _ in range(step.n_rot):
@@ -56,9 +81,10 @@ def step_volumes(compiled: CompiledProgram, step,
         v.keyswitch_count = step.n_rot
         v.evk_set_words = len(set(step.steps)) * evk_words(l, k, alpha, N)
         dnum = -(-l // alpha)
-        if fresh:
-            v.comm_up_words = dnum * (l + k) * N
+        v.comm_up_words = fresh * dnum * (l + k) * N
         v.comm_down_words = 2 * (l + k) * N
+        # base-domain adds for the passthrough terms
+        v.ewo_words = len(step.passthrough) * 2 * l * N
         return v
     node = compiled.dfg.nodes[step.nid]
     l = node.limbs
@@ -77,6 +103,13 @@ def step_volumes(compiled: CompiledProgram, step,
         v = OpVolumes()
         v.ewo_words = 2 * l * N
         v.ntt_words = 2 * N
+        return v
+    if node.op == OpKind.MOD_RAISE:
+        # bootstrap boundary: INTT both components off the base prime,
+        # NTT back over the full chain (the centered lift is host-side)
+        v = OpVolumes()
+        l_in = compiled.dfg.nodes[node.args[0]].limbs
+        v.ntt_words = 2 * (l_in + l) * N
         return v
     return None
 
@@ -145,7 +178,7 @@ class ExecutionReport:
             v = step_volumes(compiled, step)
             if v is None:
                 continue
-            if isinstance(step, HoistedStep):
+            if isinstance(step, (HoistedStep, MultiHoistedStep)):
                 dnum = -(-(step.level + 1) // alpha)
             elif v.keyswitch_count:
                 dnum = -(-compiled.dfg.nodes[step.nid].limbs // alpha)

@@ -175,24 +175,28 @@ def _xpu_phase_split(v, hw: HWConfig) -> float:
     return up / total if total > 0 else 1.0
 
 
-def _up_slice_weights(v, hw: HWConfig, groups: int, dnum: int) -> list[float]:
+def _up_slice_weights(v, hw: HWConfig, groups: int) -> list[float]:
     """Per-slice weights for the up-phase xPU work.
 
     When the block carries per-digit ModUp leg volumes (``v.modup_legs``,
     derived from the keyswitch engine's real (dnum, l_ext, N) plan
-    shapes), slice g is weighted by digit g % dnum's actual leg seconds —
-    a short last decomposition group gets a proportionally shorter xPU
-    slice, which changes fill/drain without changing any busy total.
-    Falls back to a uniform split when legs are unavailable or the group
-    count does not tile the digits."""
+    shapes), slice g is weighted by digit g % len(legs)'s actual leg
+    seconds — a short last decomposition group gets a proportionally
+    shorter xPU slice, which changes fill/drain without changing any
+    busy total.  The legs only need to TILE the slice count (groups %
+    len(legs) == 0): multi-anchor blocks from the compiled runtime
+    (``runtime.lower.MultiHoistedStep``) merge several same-level ModUps
+    into dnum summed legs while still streaming 2*dnum groups, and keep
+    the per-digit weighting here.  Falls back to a uniform split when
+    legs are unavailable or do not tile the groups."""
     legs = getattr(v, "modup_legs", ())
-    if not legs or len(legs) != dnum or groups % max(dnum, 1):
+    if not legs or groups % len(legs):
         return [1.0 / groups] * groups
     w = [ntt / hw.ntt_tput + bc / hw.bconv_tput for ntt, bc in legs]
-    total = sum(w) * (groups // dnum)
+    total = sum(w) * (groups // len(legs))
     if total <= 0.0:
         return [1.0 / groups] * groups
-    return [w[g % dnum] / total for g in range(groups)]
+    return [w[g % len(legs)] / total for g in range(groups)]
 
 
 def build_block_tasks(graph: _TaskGraph, block_idx: int, times: dict,
@@ -212,7 +216,7 @@ def build_block_tasks(graph: _TaskGraph, block_idx: int, times: dict,
     pipelined = hw.dual_overlap and hw.xmu_tput > 0
     groups = pipeline_groups(times["dnum"], pipelined)
     f_up = _xpu_phase_split(v, hw)
-    up_w = _up_slice_weights(v, hw, groups, max(times["dnum"], 1))
+    up_w = _up_slice_weights(v, hw, groups)
 
     outputs: list[Task] = []
     for g in range(groups):

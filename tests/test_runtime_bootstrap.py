@@ -1,0 +1,210 @@
+"""Compiled bootstrap tests: the full paper pipeline through the runtime.
+
+Tier-1 covers the hot structure at a small shape: compiled CoeffToSlot /
+SlotToCoeff are bit-exact with the eager path at strictly fewer ModUps
+(baby-step blocks share one ModUp per anchor via the digits cache), and
+the ``exact=False`` multi-anchor lowering closes every BSGS giant-step
+sum with ONE ModDown inside a measured error bound.  The slow-marked
+test runs the whole ModRaise -> C2S -> re/im EvalMod -> merge -> S2C
+pipeline compiled vs eager (bit-exact, fewer ModUps, decryption
+accuracy).
+"""
+import numpy as np
+import pytest
+
+from repro.core.bootstrap import Bootstrapper, auto_bsgs_bs
+from repro.core.ckks import CKKSContext
+from repro.core.params import CKKSParams
+from repro.runtime import ProgramExecutor, TraceContext, compile_program
+from repro.runtime.lower import MultiHoistedStep
+
+
+def _ct_equal(a, b):
+    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
+            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+
+
+@pytest.fixture(scope="module")
+def small_boot():
+    # C2S/S2C only need n_groups levels each — a shallow chain keeps the
+    # tier-1 matvec-parity tests fast.
+    p = CKKSParams(logN=8, L=5, alpha=2, k=3, q_bits=29, scale_bits=29)
+    ctx = CKKSContext(p, seed=7)
+    btp = Bootstrapper(ctx, n_groups=2, mod_K=3, cheb_degree=15)
+    return ctx, btp
+
+
+@pytest.fixture(scope="module")
+def c2s_traced(small_boot):
+    ctx, btp = small_boot
+    p = ctx.params
+    tc = TraceContext(p)
+    h = tc.input("x", level=p.L, scale=p.scale)
+    tc.output(btp.coeff_to_slot(h, tc), "y")
+    return tc
+
+
+def test_auto_bsgs_bs_strided():
+    """The default block size respects the FFT stride: offsets k*gap
+    split into pow2-many shared baby steps; sparse matrices stay dense."""
+    nh = 256
+    offs = [(k * 16) % nh for k in range(17)]
+    bs = auto_bsgs_bs(offs, nh)
+    assert bs == 16 * 4                       # 4 baby steps of stride 16
+    assert {d % bs for d in offs} <= {0, 16, 32, 48}
+    assert auto_bsgs_bs([0, 1, 2], nh) == 0   # too sparse
+    assert auto_bsgs_bs(list(range(9)), nh) == 2
+
+
+def test_bootstrapper_default_exposes_giant_steps(small_boot, c2s_traced):
+    """Default (bsgs_bs=None) derives a BSGS split — the traced C2S has
+    at least two keyswitch layers (baby + giant), which is what the
+    fusion/multi-anchor machinery needs to see."""
+    ctx, btp = small_boot
+    assert btp.bsgs_bs is None
+    layers = {p.layer for p in compile_program(c2s_traced).pkbs}
+    assert len(layers) >= 2
+
+
+def test_compiled_c2s_bitexact_fewer_modups(small_boot, c2s_traced, rng):
+    ctx, btp = small_boot
+    nh = ctx.params.num_slots
+    z = (rng.normal(size=nh) + 1j * rng.normal(size=nh)) * 0.01
+    ct = ctx.encrypt(z)
+    c = ctx.counters
+
+    s0 = c.snapshot()
+    exp = btp.coeff_to_slot(ct)
+    eager = c.delta(s0)
+
+    comp = compile_program(c2s_traced)
+    assert comp.n_hoisted > 0
+    ex = ProgramExecutor(ctx)
+    s1 = c.snapshot()
+    got = ex.run(comp, {"x": ct})["y"]
+    compiled = c.delta(s1)
+
+    assert _ct_equal(got, exp)
+    assert got.scale == exp.scale and got.level == exp.level
+    assert compiled.modup < eager.modup
+    assert compiled.moddown == eager.moddown   # exact mode keeps ModDowns
+
+
+def test_compiled_s2c_bitexact_fewer_modups(small_boot, rng):
+    ctx, btp = small_boot
+    p = ctx.params
+    nh = p.num_slots
+    z = (rng.normal(size=nh) + 1j * rng.normal(size=nh)) * 0.01
+    ct = ctx.encrypt(z)
+    c = ctx.counters
+
+    s0 = c.snapshot()
+    exp = btp.slot_to_coeff(ct)
+    eager = c.delta(s0)
+
+    tc = TraceContext(p)
+    h = tc.input("x", level=p.L, scale=p.scale)
+    tc.output(btp.slot_to_coeff(h, tc), "y")
+    comp = compile_program(tc)
+    ex = ProgramExecutor(ctx)
+    s1 = c.snapshot()
+    got = ex.run(comp, {"x": ct})["y"]
+    compiled = c.delta(s1)
+
+    assert _ct_equal(got, exp)
+    assert got.scale == exp.scale
+    assert compiled.modup < eager.modup
+
+
+def test_multi_anchor_one_moddown_error_bound(small_boot, c2s_traced, rng):
+    """exact=False lowers the giant-step PKBs to single-ModDown blocks:
+    strictly fewer ModDowns at the same ModUp count, and the output
+    stays within the merged-ModDown rounding bound of the exact path."""
+    ctx, btp = small_boot
+    p = ctx.params
+    nh = p.num_slots
+    z = (rng.normal(size=nh) + 1j * rng.normal(size=nh)) * 0.01
+    ct = ctx.encrypt(z)
+    c = ctx.counters
+
+    comp = compile_program(c2s_traced)
+    multi = compile_program(c2s_traced, exact=False)
+    n_multi = sum(1 for s in multi.steps if isinstance(s, MultiHoistedStep))
+    assert n_multi > 0 and multi.n_multi == n_multi
+    assert not multi.exact and comp.exact
+
+    ex = ProgramExecutor(ctx)
+    s0 = c.snapshot()
+    exact_out = ex.run(comp, {"x": ct})["y"]
+    d_exact = c.delta(s0)
+    s1 = c.snapshot()
+    multi_out = ex.run(multi, {"x": ct})["y"]
+    d_multi = c.delta(s1)
+
+    assert d_multi.moddown < d_exact.moddown
+    assert d_multi.modup == d_exact.modup
+    assert not _ct_equal(multi_out, exact_out)   # genuinely different path
+
+    # merged-ModDown rounding: each ModDown the multi path skips defers
+    # an O(k)-integer-coefficient rounding into the accumulated sum;
+    # decoded, that is at most ~N*(k+1)/scale per merged point.
+    n_merged = d_exact.moddown - d_multi.moddown
+    bound = n_merged * p.N * (p.k + 1) / p.scale
+    diff = np.abs(ctx.decrypt(multi_out) - ctx.decrypt(exact_out)).max()
+    assert diff < bound, (diff, bound)
+
+    # reconciliation holds for the multi lowering too
+    res = ex.run(multi, {"x": ct}, with_report=True)
+    rec = res.report.reconcile()
+    assert rec["counts_match"], rec
+
+
+@pytest.mark.slow
+def test_full_compiled_bootstrap(rng):
+    """End-to-end: the compiled pipeline is bit-exact with the eager
+    bootstrap, performs strictly fewer ModUps, reconciles against the
+    hoist model, feeds the group scheduler, and decrypts accurately."""
+    from repro.sim import HE2_SM
+
+    p = CKKSParams(logN=8, L=19, alpha=4, k=4, q_bits=29, scale_bits=29,
+                   q0_bits=30)
+    ctx = CKKSContext(p, seed=7, hamming_weight=8)
+    btp = Bootstrapper(ctx, n_groups=2, mod_K=3, cheb_degree=27)
+    nh = p.num_slots
+    z = (rng.normal(size=nh) + 1j * rng.normal(size=nh)) * 0.01
+    ct0 = ctx.encrypt(z, level=0)
+    c = ctx.counters
+
+    s0 = c.snapshot()
+    exp = btp.bootstrap(ct0)
+    eager = c.delta(s0)
+    assert exp.level >= 1
+
+    comp = btp.compile(input_scale=ct0.scale)
+    ex = ProgramExecutor(ctx)
+    s1 = c.snapshot()
+    res = ex.run(comp, {"ct": ct0}, with_report=True)
+    compiled = c.delta(s1)
+    got = res["out"]
+
+    assert _ct_equal(got, exp)
+    assert got.scale == exp.scale and got.level == exp.level
+    assert compiled.modup < eager.modup
+    rec = res.report.reconcile()
+    assert rec["counts_match"], rec
+    assert res.report.validate_plan_shapes(p)
+    sched = res.report.scheduled_result(comp, HE2_SM)
+    assert sched.latency_s > 0 and sched.timelines
+
+    err = np.abs(ctx.decrypt(got) - z).max()
+    assert err < 5e-2, f"compiled bootstrap error {err}"
+
+    # exact=False: fewer ModDowns, same accuracy class
+    multi = btp.compile(input_scale=ct0.scale, exact=False)
+    assert multi.n_multi > 0
+    s2 = c.snapshot()
+    got_m = ex.run(multi, {"ct": ct0})["out"]
+    d_multi = c.delta(s2)
+    assert d_multi.moddown < compiled.moddown
+    err_m = np.abs(ctx.decrypt(got_m) - z).max()
+    assert err_m < err * 1.5 + 1e-3
