@@ -15,12 +15,20 @@ Three configurations, same program:
                close with ONE ModDown per block
                (``runtime.lower.MultiHoistedStep``)
 
-Writes BENCH_bootstrap.json (including the scheduled HE2-SM latency of
-the executed plan via ``ExecutionReport.scheduled_result``) and ENFORCES
-two regression gates:
+Writes BENCH_bootstrap.json (including the scheduled HE2-SM latency and
+timeline-integrated energy of the executed plan via
+``ExecutionReport.scheduled_result``) and ENFORCES the regression gates:
 
   * compiled ModUps strictly below eager ModUps (and multi ModDowns
     strictly below compiled ModDowns) — the paper's communication story
+  * compiled ModUps strictly below the PR-4 compiled baseline
+    (``PR4_COMPILED_MODUPS``, recorded per bench shape — smoke today;
+    a shape without a recorded baseline skips the gate and says so):
+    relinearization now compiles through the keyswitch family (BSGS
+    Chebyshev EvalMod, CMults no longer eager)
+  * relin ModUp/ModDown movement: every CMult relin runs compiled
+    (relin counts recorded per configuration), and the exact=False
+    lowering merges >= 1 sum-of-CMult closure
   * steady-state compiled wall clock at least GATE_COMPILED_SPEEDUP x
     faster than the eager pipeline (plaintext/evk caching + shared
     ModUps; measured after one warmup run absorbing jit traces)
@@ -43,6 +51,11 @@ RESULTS = pathlib.Path(__file__).parent / "results"
 # runner timing noise while still catching a loss of the caching path
 # (which collapses the ratio to ~1.0x).
 GATE_COMPILED_SPEEDUP = 1.1
+
+# PR-4 compiled-bootstrap ModUp counts (CMults still eager, dense T_k
+# recurrence in EvalMod) at the exact bench shapes — the relin refactor
+# must land strictly below these.
+PR4_COMPILED_MODUPS = {True: 65}      # keyed by common.SMOKE
 
 
 def _time(fn, reps: int) -> float:
@@ -103,6 +116,7 @@ def run() -> list[str]:
                                    np.asarray(out_eager.c1)))
     err = float(np.abs(ctx.decrypt(out_comp) - z).max())
     sched = res.report.scheduled_result(comp, HE2_SM)
+    reconciled = res.report.reconcile()
 
     t = {
         "eager": _time(lambda: btp.bootstrap(ct0), reps),
@@ -121,15 +135,56 @@ def run() -> list[str]:
                    "multi": d_multi.modup},
         "moddowns": {"eager": d_eager.moddown, "compiled": d_comp.moddown,
                      "multi": d_multi.moddown},
+        "relins": {"eager": d_eager.relin, "compiled": d_comp.relin,
+                   "multi": d_multi.relin},
+        "relin_blocks_multi": d_multi.relin_blocks,
+        "merged_relins_multi": comp_multi.summary()["merged_relins"],
         "bitexact_compiled_vs_eager": bitexact,
         "decrypt_err": err,
-        "reconciled": res.report.reconcile()["counts_match"],
+        "reconciled": reconciled["counts_match"],
+        "reconciled_relin": reconciled["relin"],
         "scheduled_he2_sm_latency_ms": sched.latency_s * 1e3,
+        "scheduled_he2_sm_energy_mj": sched.energy_j * 1e3,
         "us_per_bootstrap": t,
         "speedup_vs_eager": speedup,
-        "gate": {"compiled_min_speedup": GATE_COMPILED_SPEEDUP,
-                 "compiled_speedup": speedup["compiled"],
-                 "passed": speedup["compiled"] >= GATE_COMPILED_SPEEDUP},
+    }
+
+    # Evaluate every gate BEFORE writing the JSON so the on-disk record
+    # reflects the real outcome (gate name -> (passed, message)).
+    pr4 = PR4_COMPILED_MODUPS.get(common.SMOKE)
+    gates = {
+        "bitexact": (bitexact, "compiled pipeline is not bit-exact "
+                               "with eager"),
+        "modups_vs_eager": (
+            d_comp.modup < d_eager.modup,
+            f"compiled {d_comp.modup} !< eager {d_eager.modup}"),
+        "modups_vs_pr4": (
+            # the PR-4 baseline is recorded per bench shape; skip (and
+            # say so below) when this shape has no recorded baseline
+            True if pr4 is None else d_comp.modup < pr4,
+            f"compiled-relin {d_comp.modup} !< PR-4 compiled "
+            f"baseline {pr4}"),
+        "relin_reconcile": (
+            d_comp.relin > 0
+            and reconciled["relin"][0] == reconciled["relin"][1],
+            f"relin counts did not reconcile ({reconciled['relin']})"),
+        "multi_moddowns": (
+            d_multi.moddown < d_comp.moddown,
+            f"multi {d_multi.moddown} !< compiled {d_comp.moddown}"),
+        "relin_merge": (
+            d_multi.relin_blocks >= 1,
+            "exact=False merged no sum-of-CMult closure"),
+        "compiled_speedup": (
+            speedup["compiled"] >= GATE_COMPILED_SPEEDUP,
+            f"compiled {speedup['compiled']:.2f}x < "
+            f"{GATE_COMPILED_SPEEDUP}x vs eager"),
+    }
+    summary["gate"] = {
+        "compiled_min_speedup": GATE_COMPILED_SPEEDUP,
+        "compiled_speedup": speedup["compiled"],
+        "pr4_compiled_modups": pr4,
+        "results": {name: ok for name, (ok, _) in gates.items()},
+        "passed": all(ok for ok, _ in gates.values()),
     }
     (RESULTS / "BENCH_bootstrap.json").write_text(
         json.dumps(summary, indent=2))
@@ -142,23 +197,18 @@ def run() -> list[str]:
         f"bootstrap/modups,{d_eager.modup},compiled={d_comp.modup};"
         f"multi_moddowns={d_multi.moddown}/{d_comp.moddown}"
     )
-    if not bitexact:
-        raise RuntimeError("bootstrap gate FAILED: compiled pipeline is "
-                           "not bit-exact with eager")
-    if not (d_comp.modup < d_eager.modup):
-        raise RuntimeError(
-            f"bootstrap ModUp gate FAILED: compiled {d_comp.modup} !< "
-            f"eager {d_eager.modup}"
-        )
-    if not (d_multi.moddown < d_comp.moddown):
-        raise RuntimeError(
-            f"bootstrap ModDown gate FAILED: multi {d_multi.moddown} !< "
-            f"compiled {d_comp.moddown}"
-        )
-    if speedup["compiled"] < GATE_COMPILED_SPEEDUP:
-        raise RuntimeError(
-            f"bootstrap perf gate FAILED: compiled "
-            f"{speedup['compiled']:.2f}x < {GATE_COMPILED_SPEEDUP}x vs "
-            f"eager"
-        )
+    lines.append(
+        f"bootstrap/relins,{d_comp.relin},blocks={d_multi.relin_blocks};"
+        f"merged={comp_multi.summary()['merged_relins']}"
+    )
+    lines.append(
+        f"bootstrap/sched_energy_mj,{sched.energy_j * 1e3:.4f},"
+        f"latency_ms={sched.latency_s * 1e3:.4f}"
+    )
+    if pr4 is None:
+        lines.append("bootstrap/pr4_gate,0,skipped=no PR-4 baseline "
+                     "recorded for this shape (smoke only)")
+    for name, (ok, msg) in gates.items():
+        if not ok:
+            raise RuntimeError(f"bootstrap {name} gate FAILED: {msg}")
     return lines

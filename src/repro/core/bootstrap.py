@@ -31,7 +31,9 @@ import numpy as np
 
 from repro.core import linear
 from repro.core.ckks import CKKSContext, Ciphertext
-from repro.core.polyeval import chebyshev_coeffs, eval_chebyshev
+from repro.core.polyeval import (
+    chebyshev_coeffs, eval_chebyshev, eval_chebyshev_bsgs,
+)
 
 
 # --------------------- stage matrices (numpy, exact) ---------------------
@@ -145,7 +147,8 @@ class Bootstrapper:
 
     def __init__(self, ctx: CKKSContext, n_groups: int = 3,
                  mod_K: int = 6, cheb_degree: int = 40,
-                 bsgs_bs: int | None = None):
+                 bsgs_bs: int | None = None,
+                 cheb_bs: int | None = None):
         self.ctx = ctx
         enc = ctx.encoder
         nh = enc.Nh
@@ -153,6 +156,12 @@ class Bootstrapper:
         self.mod_K = mod_K
         self.cheb_degree = cheb_degree
         self.bsgs_bs = bsgs_bs
+        # EvalMod polynomial evaluation: ``None`` (default) evaluates the
+        # Chebyshev approximant with giant-step products
+        # (``polyeval.eval_chebyshev_bsgs``, O(sqrt d) CMults whose sums
+        # compile to merged-ModDown relin blocks); ``0`` forces the dense
+        # T_k recurrence; any other value overrides the baby-step count.
+        self.cheb_bs = cheb_bs
 
         # C2S: fft_special_inv stages applied ln=Nh..2, bitrev omitted,
         # 1/nh folded into the last group.
@@ -214,7 +223,10 @@ class Bootstrapper:
             level=ct.level,
         )
         u = ctx.pt_mul(ct, pre, rescale=True)
-        out = eval_chebyshev(ctx, u, self.cheb)
+        if self.cheb_bs == 0:
+            out = eval_chebyshev(ctx, u, self.cheb)
+        else:
+            out = eval_chebyshev_bsgs(ctx, u, self.cheb, bs=self.cheb_bs)
         post = ctx.encode(np.full(nh, q0_over_scale), level=out.level)
         return ctx.pt_mul(out, post, rescale=True)
 

@@ -42,6 +42,23 @@ class Plaintext:
     scale: float
 
 
+def tensor_product(a: Ciphertext, b: Ciphertext, mods) -> tuple:
+    """(d0, d1, d2) of the degree-2 ciphertext product, pre-relin.
+
+    The single call site for the CMult tensor product: both the eager
+    ``CKKSContext.multiply`` and the compiled runtime's ``RelinStep``/
+    ``MultiRelinStep`` execution build their d-components here, so the
+    relin keyswitch always sees identical operands.  Elementwise mod-q
+    ops broadcast over an optional leading batch axis unchanged.
+    """
+    d0 = poly.mul(a.c0, b.c0, mods)
+    d1 = poly.add(
+        poly.mul(a.c0, b.c1, mods), poly.mul(a.c1, b.c0, mods), mods
+    )
+    d2 = poly.mul(a.c1, b.c1, mods)
+    return d0, d1, d2
+
+
 class CKKSContext:
     """Everything needed to run CKKS programs functionally.
 
@@ -260,19 +277,24 @@ class CKKSContext:
     # ------------------------- mult / rotate ---------------------------
     def multiply(self, a: Ciphertext, b: Ciphertext,
                  rescale: bool = True) -> Ciphertext:
+        """CMult: tensor product + relinearization of d2.
+
+        The engine path dispatches the keyswitch-family ``relin`` entry
+        point (ModUp -> IP -> ModDown -> base-domain folds, one cached
+        jit plan); the seed path keeps the per-digit loops.  Both are
+        bit-exact and tally identical ``OpCounters``.
+        """
         assert a.level == b.level
         lvl = a.level
         mods = self.pc.mods(self.chain(lvl))
-        d0 = poly.mul(a.c0, b.c0, mods)
-        d1 = poly.add(
-            poly.mul(a.c0, b.c1, mods), poly.mul(a.c1, b.c0, mods), mods
-        )
-        d2 = poly.mul(a.c1, b.c1, mods)
-        e0, e1 = self.keyswitch(d2, self.keys.mult_key, lvl)
-        out = Ciphertext(
-            poly.add(d0, e0, mods), poly.add(d1, e1, mods),
-            lvl, a.scale * b.scale,
-        )
+        d0, d1, d2 = tensor_product(a, b, mods)
+        if self.use_engine:
+            c0, c1 = self.engine.relin(d0, d1, d2, self.keys.mult_key, lvl)
+        else:
+            self.counters.relin += 1
+            e0, e1 = self.keyswitch_seed(d2, self.keys.mult_key, lvl)
+            c0, c1 = poly.add(d0, e0, mods), poly.add(d1, e1, mods)
+        out = Ciphertext(c0, c1, lvl, a.scale * b.scale)
         return self.rescale(out) if rescale else out
 
     def square(self, a: Ciphertext, rescale: bool = True) -> Ciphertext:

@@ -27,7 +27,9 @@ class OpCounters:
     ip: int = 0
     keyswitch: int = 0          # logical keyswitches (rotations + relins)
     rotation: int = 0
+    relin: int = 0              # relinearization keyswitches (CMults)
     hoisted_blocks: int = 0
+    relin_blocks: int = 0       # merged multi-relin accumulation blocks
     ntt_words: float = 0.0      # INTT + NTT butterfly-pass words
     bconv_macs: float = 0.0
     ip_macs: float = 0.0

@@ -29,6 +29,15 @@ ciphertexts through one trace (jnp backend), and every dispatch tallies
 ``OpCounters`` so reports can reconcile executed ModUp/ModDown/IP
 counts against ``dfg.hoist`` predictions.
 
+Relinearization is the second member of the keyswitch family and runs
+on the SAME plan caches: ``relin``/``relin_batched`` keyswitch the d2
+tensor-product component against the mult key (accepting pre-computed
+``digits=`` exactly like the hoisted rotations), and
+``multi_relin_sum(_batched)`` accumulates the IPs of several relin
+terms in the extended basis and closes them with ONE batched ModDown —
+the relin analogue of ``multi_hoisted_rotation_sum`` (ARK-style lazy
+ModDown), driven by ``runtime.lower.MultiRelinStep``.
+
 Backends (``PolyContext.backend``):
   * ``"jnp"``    — exact uint64 ``(a * b) % q`` ops, batched as above.
   * ``"pallas"`` — NTT/BConv/IP dispatch to the uint32 Montgomery
@@ -200,6 +209,21 @@ class KeyswitchEngine:
         c.keyswitch += m * n_rot
         c.rotation += m * n_rot
         c.hoisted_blocks += m
+
+    def _note_relin(self, plan: KeyswitchPlan, with_modup: bool,
+                    n: int = 1, m: int = 1) -> None:
+        """n relinearizations of m ciphertexts sharing one ModDown each
+        (n > 1: a merged multi-relin block — ONE ModDown total)."""
+        c = self.counters
+        if with_modup:
+            c.note_modup(plan.l, plan.l_ext, plan.group_sizes, plan.N,
+                         m * n)
+        c.note_ip(plan.dnum, plan.l_ext, plan.N, n, m)
+        c.note_moddown(plan.l, plan.k, plan.N, m)
+        c.keyswitch += m * n
+        c.relin += m * n
+        if n > 1:
+            c.relin_blocks += m
 
     # ------------------------- plans / tracing -------------------------
     def _plan(self, level: int) -> KeyswitchPlan:
@@ -442,26 +466,38 @@ class KeyswitchEngine:
             self._hoist_fns[key] = jax.jit(fn)
         return self._hoist_fns[key]
 
+    def _acc_ip_ext(self, plan: KeyswitchPlan, n: int, d_terms, evk_all):
+        """sum_r IP(d_terms[r], evk_all[r]) in the extended basis.
+
+        ``d_terms``: (n, dnum, l_ext, N); ``evk_all``: (n | 1, dnum, 2,
+        l_ext, N) — a leading 1 broadcasts ONE shared evk (the relin
+        mult key) over every term.  The single accumulation body behind
+        both merged-ModDown flavors (multi-anchor rotation sums and
+        multi-relin closures), on either backend."""
+        em = plan.ext_mods[None, :, None]
+        if self.backend == "pallas":
+            shared = evk_all.shape[0] == 1
+            acc = None
+            for r in range(n):
+                a0, a1 = fused_ip_mont(
+                    d_terms[r].astype(jnp.uint32),
+                    evk_all[0] if shared else evk_all[r], None,
+                    plan.q32, plan.qneg32, interpret=self.interpret,
+                )
+                ipr = jnp.stack([a0, a1]).astype(jnp.uint64)
+                acc = ipr if acc is None else (acc + ipr) % em
+            return acc
+        prod = (d_terms[:, :, None] * evk_all) % em[None, None]
+        ip = prod.sum(axis=1) % em[None]       # (n, 2, l_ext, N)
+        return ip.sum(axis=0) % em
+
     def _multi_core(self, plan: KeyswitchPlan, n: int, c0s, digits,
                     perms, evk_all):
         """Multi-anchor accumulation body: rotate each anchor's digits
         by ITS perm, IP against ITS evk, accumulate every term in the
         extended basis, and close with ONE batched ModDown."""
-        em = plan.ext_mods[None, :, None]
         d_rot = jax.vmap(lambda d, p: d[:, :, p])(digits, perms)
-        if self.backend == "pallas":
-            acc = None
-            for r in range(n):
-                a0, a1 = fused_ip_mont(
-                    d_rot[r].astype(jnp.uint32), evk_all[r], None,
-                    plan.q32, plan.qneg32, interpret=self.interpret,
-                )
-                ipr = jnp.stack([a0, a1]).astype(jnp.uint64)
-                acc = ipr if acc is None else (acc + ipr) % em
-        else:
-            prod = (d_rot[:, :, None] * evk_all) % em[None, None]
-            ip = prod.sum(axis=1) % em[None]   # (n, 2, l_ext, N)
-            acc = ip.sum(axis=0) % em
+        acc = self._acc_ip_ext(plan, n, d_rot, evk_all)
         bm = plan.base_mods[:, None]
         c0r = jax.vmap(lambda c, p: c[:, p])(c0s, perms)   # (n, l, N)
         base0 = c0r.sum(axis=0) % bm
@@ -477,6 +513,58 @@ class KeyswitchEngine:
                 self._count_trace(("multi_hoisted", level, n))
                 return self._multi_core(plan, n, c0s, digits, perms,
                                         evk_all)
+
+            self._hoist_fns[key] = jax.jit(fn)
+        return self._hoist_fns[key]
+
+    # ------------------------- relinearization -------------------------
+    # Relin is the OTHER member of the keyswitch family: same ModUp ->
+    # IP -> ModDown datapath, with the d2 tensor-product component in
+    # the role of the rotated c1 and the (single, program-wide) mult key
+    # in the role of the per-step rotation keys.  The entry points below
+    # reuse the same KeyswitchPlan/jit caches and the same
+    # ``modup``/``digits=`` digits interface as the hoisted rotations.
+    def _relin_core(self, plan: KeyswitchPlan, d0, d1, digits, evk):
+        """IP + ModDown of relin digits, folded into (d0, d1)."""
+        d = self._moddown2(self._ip(digits, evk, plan), plan)
+        bm = plan.base_mods[:, None]
+        return (d0 + d[0]) % bm, (d1 + d[1]) % bm
+
+    def _relin_fn(self, level: int, digits_in: bool):
+        key = ("relin", level, digits_in)
+        if key not in self._hoist_fns:
+            plan = self._plan(level)
+
+            def fn(d0, d1, x, evk):
+                self._count_trace(("relin", level, digits_in))
+                digits = x if digits_in else self._modup(x, plan)
+                return self._relin_core(plan, d0, d1, digits, evk)
+
+            self._hoist_fns[key] = jax.jit(fn)
+        return self._hoist_fns[key]
+
+    def _multi_relin_core(self, plan: KeyswitchPlan, n: int, d0s, d1s,
+                          digits, evk):
+        """Multi-relin accumulation body: every term's IP (against the
+        SHARED mult key) accumulates in the extended basis; ONE batched
+        ModDown closes the sum — the relin analogue of ``_multi_core``
+        (ARK-style lazy/deferred ModDown over summed relin outputs)."""
+        acc = self._acc_ip_ext(plan, n, digits, evk[None])
+        bm = plan.base_mods[:, None]
+        base0 = d0s.sum(axis=0) % bm
+        base1 = d1s.sum(axis=0) % bm
+        d = self._moddown2(acc, plan)
+        return (base0 + d[0]) % bm, (base1 + d[1]) % bm
+
+    def _multi_relin_fn(self, level: int, n: int):
+        key = ("multi_relin", level, n)
+        if key not in self._hoist_fns:
+            plan = self._plan(level)
+
+            def fn(d0s, d1s, digits, evk):
+                self._count_trace(("multi_relin", level, n))
+                return self._multi_relin_core(plan, n, d0s, d1s, digits,
+                                              evk)
 
             self._hoist_fns[key] = jax.jit(fn)
         return self._hoist_fns[key]
@@ -502,10 +590,28 @@ class KeyswitchEngine:
         return self._batch_fns[key]
 
     def _require_jnp(self, what: str) -> None:
+        """Gate the vmap-batched entry points to the jnp backend.
+
+        The Pallas kernel suite (``kernels/ntt``, ``kernels/bconv``,
+        ``kernels/fused_ip``) is not ``jax.vmap``-compatible yet — its
+        grid specs are written against unbatched operand shapes — so a
+        ``backend="pallas"`` engine cannot trace the batched rotation or
+        relin plans.  The unbatched entry points (``keyswitch``,
+        ``hoisted_rotation_sum``, ``relin``, ``multi_relin_sum``) run on
+        either backend.  See the ROADMAP follow-on "make the Pallas
+        kernel suite vmap-compatible" and the skip-marked anchor test in
+        ``tests/test_relin.py``.
+        """
         if self.backend != "jnp":
             raise NotImplementedError(
-                f"{what} batching requires backend='jnp' (the Pallas "
-                f"kernels are not vmap-compatible yet)"
+                f"KeyswitchEngine.{what} is batched via jax.vmap and "
+                f"requires backend='jnp'; the Pallas kernel suite "
+                f"(kernels/ntt, kernels/bconv, kernels/fused_ip) is not "
+                f"vmap-compatible yet, so backend='pallas' can only "
+                f"dispatch the unbatched entry points.  Construct the "
+                f"context with backend='jnp' for batched/compiled-batch "
+                f"programs (ROADMAP: 'make the Pallas kernel suite "
+                f"vmap-compatible')."
             )
 
     def _ks_batched_fn(self, level: int):
@@ -584,6 +690,40 @@ class KeyswitchEngine:
             return fn
 
         return self._batched_fn(("multi_hoisted_b", level, n), make)
+
+    def _relin_batched_fn(self, level: int, digits_in: bool):
+        plan = self._plan(level)
+
+        def make():
+            def fn(d0b, d1b, xb, evk):
+                self._count_trace(("relin_b", level, digits_in))
+
+                def one(d0, d1, x):
+                    digits = x if digits_in else self._modup(x, plan)
+                    return self._relin_core(plan, d0, d1, digits, evk)
+
+                return jax.vmap(one)(d0b, d1b, xb)
+
+            return fn
+
+        return self._batched_fn(("relin_b", level, digits_in), make)
+
+    def _multi_relin_batched_fn(self, level: int, n: int):
+        plan = self._plan(level)
+
+        def make():
+            def fn(d0s, d1s, digits, evk):
+                self._count_trace(("multi_relin_b", level, n))
+
+                def one(d0s_1, d1s_1, digits_1):
+                    return self._multi_relin_core(plan, n, d0s_1, d1s_1,
+                                                  digits_1, evk)
+
+                return jax.vmap(one, in_axes=(1, 1, 1))(d0s, d1s, digits)
+
+            return fn
+
+        return self._batched_fn(("multi_relin_b", level, n), make)
 
     def _modup_batched_fn(self, level: int):
         plan = self._plan(level)
@@ -672,6 +812,45 @@ class KeyswitchEngine:
             jnp.stack(c0s), jnp.stack(digits_list), perms, evk_all
         )
 
+    def relin(self, d0, d1, d2, evk: EvalKey, level: int, digits=None):
+        """Relinearize a degree-2 ciphertext: (d0, d1) + KS(d2).
+
+        The relin member of the keyswitch family: ModUp of the d2
+        tensor-product component (skipped when pre-computed ``digits``
+        from :meth:`modup` are passed — same digits-cache interface as
+        the hoisted rotations), one IP against the mult key, one batched
+        ModDown, and the base-domain folds into d0/d1 — all inside one
+        cached jit plan.  Bit-exact with keyswitch-then-add.
+        """
+        plan = self._plan(level)
+        self._note_relin(plan, digits is None)
+        fn = self._relin_fn(level, digits is not None)
+        x = digits if digits is not None else d2
+        return fn(d0, d1, x, self.evk_tensor(evk, level))
+
+    def multi_relin_sum(self, d0s, d1s, digits_list, evk: EvalKey,
+                        level: int):
+        """sum_i [(d0_i, d1_i) + KS(d2_i)] with ONE ModDown
+        (``runtime.lower.MultiRelinStep``).
+
+        ``digits_list``: per-term pre-computed ModUp digits of the d2
+        components (from :meth:`modup` — each term pays its own ModUp;
+        d2 tensors are fresh per CMult, so unlike rotation anchors they
+        never share one).  Every term's IP against the SHARED mult key
+        accumulates in the extended basis and a single batched ModDown
+        closes the sum — numerically close to, but not bit-identical
+        with, per-term relinearization (the approximate-FBC rounding of
+        the merged ModDowns differs), exactly like
+        :meth:`multi_hoisted_rotation_sum`.
+        """
+        plan = self._plan(level)
+        n = len(digits_list)
+        self._note_relin(plan, with_modup=False, n=n)
+        return self._multi_relin_fn(level, n)(
+            jnp.stack(d0s), jnp.stack(d1s), jnp.stack(digits_list),
+            self.evk_tensor(evk, level),
+        )
+
     # -------- batched public API (leading ct axis, jnp backend) --------
     def keyswitch_batched(self, ab, evk: EvalKey, level: int):
         """Batched keyswitch of (B, l, N) polys through ONE jit trace."""
@@ -714,6 +893,31 @@ class KeyswitchEngine:
         evk_all = self.evk_group_tensor(evks, level)
         return self._multi_batched_fn(level, n)(
             jnp.stack(c0s), jnp.stack(digits_list), perms, evk_all
+        )
+
+    def relin_batched(self, d0b, d1b, d2b, evk: EvalKey, level: int,
+                      digits=None):
+        """Batched relinearization of (B, l, N) degree-2 components
+        through ONE jit trace (``digits``: (B, dnum, l_ext, N))."""
+        self._require_jnp("relin")
+        plan = self._plan(level)
+        self._note_relin(plan, digits is None, m=int(d0b.shape[0]))
+        fn = self._relin_batched_fn(level, digits is not None)
+        x = digits if digits is not None else d2b
+        return fn(d0b, d1b, x, self.evk_tensor(evk, level))
+
+    def multi_relin_sum_batched(self, d0s, d1s, digits_list,
+                                evk: EvalKey, level: int):
+        """Batched multi-relin accumulation: per-term (B, l, N) d0/d1
+        and (B, dnum, l_ext, N) digits, vmapped over the ct axis."""
+        self._require_jnp("multi_relin_sum")
+        plan = self._plan(level)
+        n = len(digits_list)
+        self._note_relin(plan, with_modup=False, n=n,
+                         m=int(d0s[0].shape[0]))
+        return self._multi_relin_batched_fn(level, n)(
+            jnp.stack(d0s), jnp.stack(d1s), jnp.stack(digits_list),
+            self.evk_tensor(evk, level),
         )
 
     def hoisted_rotation_sum_batched(self, c0b, c1b, galois_list,

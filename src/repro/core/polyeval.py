@@ -20,6 +20,8 @@ executor, which is what keeps that pipeline bit-exact end to end.
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 from repro.core.ckks import CKKSContext, Ciphertext
@@ -65,6 +67,7 @@ class ChebyshevEvaluator:
 
     def __init__(self, ctx: CKKSContext, ct_x: Ciphertext):
         self.ctx = ctx
+        self.ct = ct_x
         self.T: dict[int, Ciphertext] = {1: ct_x}
 
     def get(self, k: int) -> Ciphertext:
@@ -97,10 +100,17 @@ class ChebyshevEvaluator:
 
 
 def eval_chebyshev(ctx: CKKSContext, ct: Ciphertext,
-                   coeffs: np.ndarray, tol: float = 1e-13) -> Ciphertext:
-    """sum_k coeffs[k] * T_k(ct) for x in [-1, 1]."""
+                   coeffs: np.ndarray, tol: float = 1e-13,
+                   ev: ChebyshevEvaluator | None = None) -> Ciphertext:
+    """sum_k coeffs[k] * T_k(ct) for x in [-1, 1].
+
+    ``ev``: a shared :class:`ChebyshevEvaluator` whose T_k cache is
+    reused (and extended) instead of rebuilding the basis — the BSGS
+    evaluation routes its sub-polynomials through here.
+    """
     d = len(coeffs) - 1
-    ev = ChebyshevEvaluator(ctx, ct)
+    if ev is None:
+        ev = ChebyshevEvaluator(ctx, ct)
     needed = [k for k in range(1, d + 1) if abs(coeffs[k]) > tol]
     for k in needed:
         ev.get(k)
@@ -114,6 +124,125 @@ def eval_chebyshev(ctx: CKKSContext, ct: Ciphertext,
         term = ctx.level_down(term, min_lvl)
         acc = term if acc is None else ctx.add(acc, term)
     return add_const(ctx, acc, complex(coeffs[0]))
+
+
+# ---------------------- BSGS (Paterson-Stockmeyer) -----------------------
+
+def _trim_degree(c, tol: float) -> int:
+    d = len(c) - 1
+    while d > 0 and abs(c[d]) <= tol:
+        d -= 1
+    return d
+
+
+def cheb_divmod(c: np.ndarray, g: int) -> tuple[np.ndarray, np.ndarray]:
+    """Chebyshev-basis division: c = q * T_g + r with deg r < g.
+
+    Uses 2*T_g*T_i = T_{g+i} + T_{g-i}: q_0 = c_g, q_i = 2*c_{g+i}, and
+    r_{g-i} = c_{g-i} - c_{g+i}.  Requires deg(c) <= 2g (guaranteed when
+    g is the largest power-of-two giant step below deg(c))."""
+    d = len(c) - 1
+    assert g <= d <= 2 * g, (d, g)
+    q = np.zeros(d - g + 1, dtype=complex)
+    r = np.array(c[:g], dtype=complex)
+    q[0] = c[g]
+    for i in range(1, d - g + 1):
+        q[i] = 2 * c[g + i]
+        r[g - i] -= c[g + i]
+    return q, r
+
+
+def eval_chebyshev_bsgs(ctx: CKKSContext, ct: Ciphertext,
+                        coeffs: np.ndarray, bs: int | None = None,
+                        tol: float = 1e-13) -> Ciphertext:
+    """sum_k coeffs[k] * T_k(ct) via baby-step/giant-step products.
+
+    Paterson-Stockmeyer in the Chebyshev basis: only T_1..T_bs and the
+    giant steps T_{2^j * bs} are materialized (``bs`` defaults to the
+    power of two nearest sqrt(deg)); the polynomial is peeled into
+    quotient/remainder chains by :func:`cheb_divmod`, so the evaluation
+    becomes a SUM of giant-step products q_i(x) * T_{g_i}(x) — O(sqrt d)
+    CMults instead of the O(d) of the dense T_k recurrence.
+
+    Every product of one closure is built at a common level WITHOUT
+    rescaling (scales pinned to scale^2 exactly), summed, and closed by
+    ONE rescale: traced through the compiled runtime this is a
+    sum-of-CMult closure, which ``runtime.lower`` turns into a
+    ``MultiRelinStep`` — all relin IPs accumulate in the extended basis
+    and ONE ModDown closes the block (``exact=False``).
+    """
+    d = _trim_degree(coeffs, tol)
+    if bs is None:
+        bs = 1 << max(1, round(math.log2(math.sqrt(d + 1))))
+    if d < max(bs, 2) or d < 4:
+        return eval_chebyshev(ctx, ct, coeffs[: d + 1], tol=tol)
+    ev = ChebyshevEvaluator(ctx, ct)
+    g_top = bs
+    while g_top * 2 <= d:
+        g_top *= 2
+    for g in [bs << j for j in range((g_top // bs).bit_length())]:
+        ev.get(g)                     # giants built shallow-first
+    return _ps_eval(ctx, ev, np.asarray(coeffs[: d + 1], dtype=complex),
+                    bs, tol)
+
+
+def _ps_eval(ctx: CKKSContext, ev: ChebyshevEvaluator, c: np.ndarray,
+             bs: int, tol: float) -> Ciphertext:
+    """One recursion level of the BSGS evaluation: peel giant-step
+    products off ``c``, evaluate the quotients (recursively), and close
+    products + remainder terms with a single rescale."""
+    d = _trim_degree(c, tol)
+    if d < bs:
+        return eval_chebyshev(ctx, ev.ct, c[: d + 1], tol=tol, ev=ev)
+
+    prods: list[tuple[np.ndarray, int]] = []
+    rem = np.array(c[: d + 1], dtype=complex)
+    while _trim_degree(rem, tol) >= bs:
+        dr = _trim_degree(rem, tol)
+        g = bs
+        while g * 2 <= dr:
+            g *= 2
+        q, rem = cheb_divmod(rem[: dr + 1], g)
+        prods.append((q, g))
+
+    # constant quotients need no CMult — they are plain pt-mul terms
+    pairs: list[tuple[Ciphertext, int]] = []
+    direct: list[tuple[complex, int]] = []
+    for q, g in prods:
+        if _trim_degree(q, tol) == 0:
+            if abs(q[0]) > tol:
+                direct.append((complex(q[0]), g))
+            continue
+        pairs.append((_ps_eval(ctx, ev, q, bs, tol), g))
+    direct += [(complex(rem[b]), b)
+               for b in range(1, _trim_degree(rem, tol) + 1)
+               if abs(rem[b]) > tol]
+    # one closure: every product CMult and pt-mul passthrough lands at
+    # the same level and the exact scale^2, summed, then ONE rescale
+    S = ctx.params.scale
+    P = S * S
+    lvls = [min(qe.level - 1, ev.get(g).level) for qe, g in pairs]
+    lvls += [ev.get(k).level for _, k in direct]
+    lvl = min(lvls)
+    nh = ctx.params.num_slots
+    acc = None
+    for qe, g in pairs:
+        tg = ctx.level_down(ev.get(g), lvl)
+        qel = align(ctx, qe, lvl, P / tg.scale)
+        prod = ctx.multiply(qel, tg, rescale=False)
+        prod.scale = P                # exact by construction
+        acc = prod if acc is None else ctx.add(acc, prod)
+    for coef, k in direct:
+        tk = ctx.level_down(ev.get(k), lvl)
+        pt = ctx.encode(np.full(nh, complex(coef)), level=lvl,
+                        scale=P / tk.scale)
+        term = ctx.pt_mul(tk, pt, rescale=False)
+        term.scale = P
+        acc = term if acc is None else ctx.add(acc, term)
+    out = ctx.rescale(acc)
+    if abs(rem[0]) > tol:
+        out = add_const(ctx, out, complex(rem[0]))
+    return out
 
 
 def eval_poly_horner(ctx: CKKSContext, ct: Ciphertext,

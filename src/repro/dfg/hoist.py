@@ -49,6 +49,7 @@ class OpVolumes:
     moddown_count: int = 0
     ip_count: int = 0
     keyswitch_count: int = 0
+    relin_count: int = 0        # relinearization keyswitches (CMults)
     # Per-digit ModUp leg volumes — ((ntt_words, bconv_macs), ...) one
     # entry per decomposition digit, derived from the same (dnum, l_ext,
     # N) shapes the keyswitch engine's plans use.  The group scheduler
@@ -254,6 +255,7 @@ def non_pkb_blocks(dfg: DFG, pkbs: list[PKB], k: int, alpha: int,
                  + ip_volumes(l, k, alpha, N))
             if node.op == OpKind.CMULT:
                 v.ewo_words += 4 * l * N
+                v.relin_count += 1
             v.keyswitch_count += 1
             v.evk_set_words = evk_words(l, k, alpha, N)
             if dataflow == "IRF":

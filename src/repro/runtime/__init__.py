@@ -16,9 +16,11 @@ the *functional* runtime:
           simulator consumes;
   compile (compile.compile_program) — identify PKBs, optionally run the
           ``dfg.fusion.optimal_fusion`` DP, and lower (lower.py) fused
-          plans to hoisted-rotation-sum blocks + eager engine EWOs;
+          plans to keyswitch-family steps: hoisted-rotation-sum blocks,
+          one ``RelinStep`` per CMULT, + eager engine EWOs;
           ``exact=False`` additionally lowers multi-anchor giant-step
-          PKBs to single-ModDown accumulation blocks;
+          PKBs and sum-of-CMult closures to single-ModDown accumulation
+          blocks (``MultiHoistedStep``/``MultiRelinStep``);
   execute (exec.ProgramExecutor)  — run the lowered plan on a real
           ``CKKSContext``/``KeyswitchEngine``, sharing one ModUp across
           every block anchored on the same ciphertext, and batching

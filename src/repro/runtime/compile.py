@@ -261,14 +261,32 @@ class CompiledProgram:
                    if isinstance(s, MultiHoistedStep))
 
     @property
+    def n_relin(self) -> int:
+        from repro.runtime.lower import RelinStep
+
+        return sum(1 for s in self.steps if isinstance(s, RelinStep))
+
+    @property
+    def n_multi_relin(self) -> int:
+        from repro.runtime.lower import MultiRelinStep
+
+        return sum(1 for s in self.steps
+                   if isinstance(s, MultiRelinStep))
+
+    @property
     def n_eager(self) -> int:
-        return len(self.steps) - self.n_hoisted - self.n_multi
+        return len(self.steps) - (self.n_hoisted + self.n_multi
+                                  + self.n_relin + self.n_multi_relin)
 
     def summary(self) -> dict:
-        from repro.runtime.lower import HoistedStep, MultiHoistedStep
+        from repro.runtime.lower import (
+            HoistedStep, MultiHoistedStep, MultiRelinStep, RelinStep,
+        )
 
         hoisted = [s for s in self.steps if isinstance(s, HoistedStep)]
         multi = [s for s in self.steps if isinstance(s, MultiHoistedStep)]
+        relin = [s for s in self.steps if isinstance(s, RelinStep)]
+        mrelin = [s for s in self.steps if isinstance(s, MultiRelinStep)]
         return {
             "nodes": len(self.dfg.nodes),
             "pkbs": len(self.pkbs),
@@ -277,11 +295,17 @@ class CompiledProgram:
             "hoisted_steps": len(hoisted),
             "multi_anchor_steps": len(multi),
             "shared_modups": sum(1 for s in hoisted if not s.fresh_modup),
+            "relin_steps": len(relin),
+            "multi_relin_steps": len(mrelin),
+            "merged_relins": sum(s.n_relin for s in mrelin),
             "eager_steps": self.n_eager,
             "predicted_modups": (
                 sum(1 for s in hoisted if s.fresh_modup)
                 + sum(len(s.fresh_anchors) for s in multi)
+                + len(relin)
+                + sum(s.n_relin for s in mrelin)
             ),
+            "predicted_relin_moddowns": len(relin) + len(mrelin),
         }
 
 
@@ -299,14 +323,20 @@ def compile_program(tc: TraceContext, fusion: bool = False,
     numerically equivalent, not bit-identical (different evk
     trajectories), and strictly fewer ModUps/ModDowns.
 
+    Relinearization always compiles through the keyswitch family: every
+    CMULT lowers to a ``lower.RelinStep`` on the engine's ``relin``
+    entry point (bit-exact with eager ``CKKSContext.multiply``).
+
     exact=False additionally lowers multi-anchor PKBs (the giant-step
     phase of BSGS, whose rotations consume different ciphertexts) to
-    ``lower.MultiHoistedStep`` blocks: per-rotation IPs accumulate in
-    the extended basis and ONE ModDown closes the whole sum, instead of
-    one ModDown per giant rotation.  Numerically close but not
+    ``lower.MultiHoistedStep`` blocks, and sum-of-CMult closures (the
+    giant-step product sums of ``polyeval.eval_chebyshev_bsgs``) to
+    ``lower.MultiRelinStep`` blocks: per-term IPs accumulate in the
+    extended basis and ONE ModDown closes the whole sum, instead of one
+    ModDown per rotation/relin.  Numerically close but not
     bit-identical (the approximate-FBC rounding of the merged ModDowns
-    differs); see ``tests/test_runtime_bootstrap.py`` for the measured
-    error bound.
+    differs); see ``tests/test_runtime_bootstrap.py`` and
+    ``tests/test_relin.py`` for the measured error bounds.
     """
     from repro.runtime.lower import lower_program
 

@@ -4,9 +4,12 @@ Two entry points:
 
 * :meth:`ProgramExecutor.run` — one ciphertext per program input.
   Hoisted steps sharing an anchor share ONE ModUp (``ctx.hoist_digits``
-  once per anchor, digits fed to every block); everything is dispatched
-  through the exact same engine entry points the eager path uses, which
-  is what makes ``fusion=False`` compilation bit-exact with eager code.
+  once per anchor, digits fed to every block); relin steps run the
+  shared ``core.ckks.tensor_product`` + the engine's ``relin`` family
+  (``MultiRelinStep``: per-term d2 ModUps, one merged ModDown);
+  everything is dispatched through the exact same engine entry points
+  the eager path uses, which is what makes ``fusion=False``
+  compilation bit-exact with eager code.
 
 * :meth:`ProgramExecutor.run_batched` — a LIST of independent
   ciphertexts per input.  The whole batch flows through the engine's
@@ -25,10 +28,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import poly
-from repro.core.ckks import CKKSContext, Ciphertext, Plaintext
+from repro.core.ckks import CKKSContext, Ciphertext, Plaintext, \
+    tensor_product
 from repro.dfg.graph import OpKind
 from repro.runtime.compile import CompiledProgram
-from repro.runtime.lower import EagerStep, HoistedStep, MultiHoistedStep
+from repro.runtime.lower import (
+    EagerStep, HoistedStep, MultiHoistedStep, MultiRelinStep, RelinStep,
+)
 
 
 @dataclasses.dataclass
@@ -123,6 +129,10 @@ class ProgramExecutor:
                 self._exec_hoisted(compiled, step, values, digits, batch)
             elif isinstance(step, MultiHoistedStep):
                 self._exec_multi(compiled, step, values, digits, batch)
+            elif isinstance(step, RelinStep):
+                self._exec_relin(compiled, step, values, batch)
+            elif isinstance(step, MultiRelinStep):
+                self._exec_multi_relin(compiled, step, values, batch)
             else:
                 self._exec_eager(compiled, step, values, outputs, inputs,
                                  batch)
@@ -219,6 +229,64 @@ class ProgramExecutor:
             out = ctx.add(out, values[anchor])
         self._finish(compiled, step.out, out, values)
 
+    # ------------------------- relin steps -----------------------------
+    def _exec_relin(self, compiled, step: RelinStep, values,
+                    batch: int) -> None:
+        """One CMULT through the keyswitch family: shared tensor product
+        + engine relin (ModUp -> IP -> ModDown -> folds, one jit plan).
+        Bit-exact with eager ``CKKSContext.multiply(rescale=False)``."""
+        ctx = self.ctx
+        a, b = values[step.args[0]], values[step.args[1]]
+        lvl = step.level
+        assert a.level == lvl and b.level == lvl, \
+            "relin operand level drifted from the trace"
+        if not ctx.use_engine:
+            out = ctx.multiply(a, b, rescale=False)
+        else:
+            mods = ctx.pc.mods(ctx.chain(lvl))
+            d0, d1, d2 = tensor_product(a, b, mods)
+            key = ctx.keys.mult_key
+            if batch:
+                c0, c1 = ctx.engine.relin_batched(d0, d1, d2, key, lvl)
+            else:
+                c0, c1 = ctx.engine.relin(d0, d1, d2, key, lvl)
+            out = Ciphertext(c0, c1, lvl, a.scale * b.scale)
+        self._finish(compiled, step.out, out, values)
+
+    def _exec_multi_relin(self, compiled, step: MultiRelinStep, values,
+                          batch: int) -> None:
+        """Sum-of-CMult closure: per-term d2 ModUp (the engine's shared
+        ``modup`` entry point, same digits interface as the rotations),
+        all relin IPs accumulated in the extended basis, ONE ModDown."""
+        ctx = self.ctx
+        if not ctx.use_engine:
+            raise NotImplementedError(
+                "exact=False multi-relin steps require the engine path")
+        lvl = step.level
+        mods = ctx.pc.mods(ctx.chain(lvl))
+        d0s, d1s, digs = [], [], []
+        scale = None
+        for _nid, (an, bn) in step.cmults:
+            a, b = values[an], values[bn]
+            assert a.level == lvl and b.level == lvl, \
+                "relin operand level drifted from the trace"
+            d0, d1, d2 = tensor_product(a, b, mods)
+            d0s.append(d0)
+            d1s.append(d1)
+            digs.append(ctx.engine.modup_batched(d2, lvl) if batch
+                        else ctx.engine.modup(d2, lvl))
+            scale = a.scale * b.scale if scale is None else scale
+        key = ctx.keys.mult_key
+        if batch:
+            c0, c1 = ctx.engine.multi_relin_sum_batched(
+                d0s, d1s, digs, key, lvl)
+        else:
+            c0, c1 = ctx.engine.multi_relin_sum(d0s, d1s, digs, key, lvl)
+        out = Ciphertext(c0, c1, lvl, scale)
+        for nid in step.passthrough:
+            out = ctx.add(out, values[nid])
+        self._finish(compiled, step.out, out, values)
+
     def _step_pt(self, compiled, step: HoistedStep, s: int) -> Plaintext:
         """The (possibly fused) plaintext multiplying Rot_s(anchor)."""
         terms = step.pt_terms[s]
@@ -268,8 +336,6 @@ class ProgramExecutor:
             out = self._rotate(a, node.attrs["steps"], batch)
         elif op == OpKind.CONJ:
             out = self._conjugate(a, batch)
-        elif op == OpKind.CMULT:
-            out = self._multiply(a, values[node.args[1]], batch)
         elif op == OpKind.CADD:
             out = ctx.add(a, values[node.args[1]])
         elif op == OpKind.CSUB:
@@ -319,21 +385,6 @@ class ProgramExecutor:
         c0, c1 = ctx.engine.apply_galois_batched(
             ct.c0, ct.c1, g, ctx.keys.conj_key, ct.level)
         return Ciphertext(c0, c1, ct.level, ct.scale)
-
-    def _multiply(self, a, b, batch: int) -> Ciphertext:
-        ctx = self.ctx
-        if not batch:
-            return ctx.multiply(a, b, rescale=False)
-        lvl = a.level
-        mods = ctx.pc.mods(ctx.chain(lvl))
-        d0 = poly.mul(a.c0, b.c0, mods)
-        d1 = poly.add(
-            poly.mul(a.c0, b.c1, mods), poly.mul(a.c1, b.c0, mods), mods
-        )
-        d2 = poly.mul(a.c1, b.c1, mods)
-        e0, e1 = ctx.engine.keyswitch_batched(d2, ctx.keys.mult_key, lvl)
-        return Ciphertext(poly.add(d0, e0, mods), poly.add(d1, e1, mods),
-                          lvl, a.scale * b.scale)
 
     def _mod_raise(self, ct, batch: int) -> Ciphertext:
         """Bootstrap boundary (centered-CRT lift, numpy object math) —

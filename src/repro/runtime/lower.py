@@ -10,13 +10,23 @@ using Rot_a(Rot_b(x)) = Rot_{a+b}(x) and Rot_s(pt * x) =
 roll(pt, -s) * Rot_s(x) (Eq. (4) of the paper).  A lifted sink lowers to
 ONE ``hoisted_rotation_sum`` engine invocation; sinks sharing an anchor
 ciphertext share one ModUp (cross-block double hoisting).  Anything that
-does not lift — PAdds inside a region, CMult chains — falls back to
+does not lift — PAdds inside a region, for instance — falls back to
 eager per-op execution, which keeps the compiled path bit-exact with
 the eager one by construction.  Multi-anchor PKBs (the giant-step
 blocks of BSGS, whose rotations consume different ciphertexts) stay
 eager under ``exact=True``; with ``exact=False`` they lower to
 ``MultiHoistedStep``s that accumulate every rotation's IP in the
 extended basis and close the sum with ONE ModDown.
+
+Relinearization is lowered through the same keyswitch-family hierarchy
+(see ``KeyswitchFamilyStep``): every CMULT node becomes a ``RelinStep``
+on the engine's ``relin`` entry point (bit-exact with eager
+``CKKSContext.multiply``), and with ``exact=False`` the sum-of-CMult
+closures of the BSGS Chebyshev evaluation (CAdd trees over >= 2
+same-level CMULTs, ``polyeval.eval_chebyshev_bsgs``'s giant-step
+product sums) merge into ``MultiRelinStep``s — all relin IPs of the
+closure accumulate in the extended basis and ONE ModDown closes the
+block, the relin analogue of the multi-anchor rotation lowering.
 
 With ``fusion=True`` the lift is allowed to recurse across the members
 of an ``optimal_fusion`` group, composing serial PKBs into one block
@@ -41,9 +51,31 @@ class Unliftable(Exception):
     """Raised when a sink expression has no hoisted-rotation-sum form."""
 
 
+class KeyswitchFamilyStep:
+    """Base of every step dispatched on the keyswitch engine.
+
+    The keyswitch family has two flavors sharing the ModUp -> IP ->
+    ModDown datapath: *rotation* (``HoistedStep``/``MultiHoistedStep``,
+    per-step galois keys, digits rotated in the eval domain) and
+    *relinearization* (``RelinStep``/``MultiRelinStep``, the d2
+    tensor-product component against the one program-wide mult key).
+    The ``Multi*`` variants of both accumulate several terms' IPs in the
+    extended basis and close them with ONE ModDown (``exact=False``
+    lowering only — the merged approximate-FBC rounding differs from
+    the per-term trajectory).  All subclasses carry ``out`` (the DFG
+    node the step produces) and ``level``.
+    """
+
+    family = "keyswitch"
+    out: int
+    level: int
+
+
 @dataclasses.dataclass
-class HoistedStep:
+class HoistedStep(KeyswitchFamilyStep):
     """One hoisted-rotation-sum invocation producing node ``out``."""
+
+    family = "rotation"
 
     out: int
     anchor: int
@@ -62,7 +94,7 @@ class HoistedStep:
 
 
 @dataclasses.dataclass
-class MultiHoistedStep:
+class MultiHoistedStep(KeyswitchFamilyStep):
     """One multi-anchor accumulation closed by a SINGLE ModDown.
 
     ``sink = sum_i Rot_{s_i}(anchor_i) [+ sum_j passthrough_j]`` where
@@ -84,6 +116,8 @@ class MultiHoistedStep:
     # the step runs); filled in program order by ``lower_program``
     fresh_anchors: list[int] = dataclasses.field(default_factory=list)
 
+    family = "rotation"
+
     @property
     def n_rot(self) -> int:
         return len(self.rot_terms)
@@ -91,6 +125,47 @@ class MultiHoistedStep:
     @property
     def steps(self) -> list[int]:
         return [s for _, s in self.rot_terms]
+
+
+@dataclasses.dataclass
+class RelinStep(KeyswitchFamilyStep):
+    """One engine relinearization producing CMULT node ``out``.
+
+    Executed via ``KeyswitchEngine.relin(_batched)``: tensor product of
+    the two argument ciphertexts, ModUp of d2 on the shared plan cache,
+    IP against the mult key, one ModDown, base-domain folds — bit-exact
+    with the eager ``CKKSContext.multiply`` (``exact=True`` safe)."""
+
+    family = "relin"
+
+    out: int
+    level: int
+    args: tuple[int, int]                   # (a nid, b nid)
+
+
+@dataclasses.dataclass
+class MultiRelinStep(KeyswitchFamilyStep):
+    """One sum-of-CMult closure closed by a SINGLE ModDown.
+
+    ``sink = sum_i CMult(a_i, b_i) [+ sum_j passthrough_j]`` — the
+    giant-step product sums of the BSGS Chebyshev evaluation
+    (``polyeval.eval_chebyshev_bsgs``).  Each term still pays its own d2
+    ModUp (d2 tensors are fresh per CMult), but all relin IPs against
+    the shared mult key accumulate in the extended basis and ONE
+    ModDown closes the whole sum — versus one ModDown per CMult on the
+    per-term path.  ``exact=False`` lowering only (merged ModDown
+    rounding), the relin analogue of ``MultiHoistedStep``."""
+
+    family = "relin"
+
+    out: int
+    level: int
+    cmults: list[tuple[int, tuple[int, int]]]   # (cmult nid, (a, b))
+    passthrough: list[int]                      # terms added unmerged
+
+    @property
+    def n_relin(self) -> int:
+        return len(self.cmults)
 
 
 @dataclasses.dataclass
@@ -266,6 +341,94 @@ def _lower_multi(dfg, pkb: PKB,
     return out_steps, consumed
 
 
+_SUM_OPS = {OpKind.CADD, OpKind.CSUB, OpKind.CSCALE}
+
+
+def _lift_sum(dfg, sink: int) -> tuple[dict[int, float], set[int]]:
+    """Rewrite ``sink`` as sum_i c_i * term_i over non-EWO terms.
+
+    The relin analogue of ``_lift_multi``'s walk: descends through
+    CAdd/CSub/CScale only; every other node terminates as a term.
+    Returns ({term nid: coeff}, visited interior nodes incl. sink)."""
+    memo: dict[int, dict[int, float]] = {}
+    visited: set[int] = set()
+
+    def ev(nid: int) -> dict[int, float]:
+        node = dfg.nodes[nid]
+        if nid != sink and node.op not in _SUM_OPS:
+            return {nid: 1.0}
+        if nid in memo:
+            return memo[nid]
+        if node.op in (OpKind.CADD, OpKind.CSUB):
+            out = dict(ev(node.args[0]))
+            sign = -1.0 if node.op == OpKind.CSUB else 1.0
+            for k, c in ev(node.args[1]).items():
+                out[k] = out.get(k, 0.0) + sign * c
+        elif node.op == OpKind.CSCALE:
+            c0 = float(node.attrs.get("c", 2))
+            out = {k: c * c0 for k, c in ev(node.args[0]).items()}
+        else:
+            raise Unliftable(f"node {nid} ({node.op.value}) is no sum")
+        memo[nid] = out
+        visited.add(nid)
+        return out
+
+    return ev(sink), visited
+
+
+def _relin_closures(dfg, blocked: set[int]) -> tuple[
+        dict[int, MultiRelinStep], set[int], set[int]]:
+    """Identify sum-of-CMult closures: maximal CAdd trees over >= 2
+    same-level unit-coefficient CMULT terms whose values never escape.
+
+    ``blocked``: nodes already claimed by the rotation lowering — a
+    closure may not overlap them.  Returns (sink -> step, consumed
+    interior nodes, claimed CMULT nids)."""
+    steps: dict[int, MultiRelinStep] = {}
+    consumed: set[int] = set()
+    claimed: set[int] = set()
+    for nid in reversed(dfg.topo_order()):
+        node = dfg.nodes[nid]
+        if node.op not in (OpKind.CADD, OpKind.CSUB):
+            continue
+        if nid in consumed or nid in blocked:
+            continue
+        try:
+            terms, visited = _lift_sum(dfg, nid)
+        except Unliftable:
+            continue
+        terms = {k: c for k, c in terms.items() if c != 0.0}
+        cmults = sorted(t for t in terms
+                        if dfg.nodes[t].op == OpKind.CMULT)
+        if len(cmults) < 2:
+            continue
+        if any(terms[t] != 1.0 for t in terms):
+            continue                  # scaled terms: keep per-term relin
+        if any(dfg.nodes[t].limbs != node.limbs for t in cmults):
+            continue                  # terms at differing levels
+        if any(t in claimed or t in blocked for t in cmults):
+            continue
+        inner = (visited - {nid}) | set(cmults)
+        if inner & blocked:
+            continue
+        # conservative: neither interior sums nor merged CMULT values
+        # may be consumed outside the closure (their base-domain values
+        # are never materialized)
+        if any(dfg.succs(v) - visited for v in inner):
+            continue
+        passthrough = sorted(t for t in terms if t not in cmults)
+        if any(dfg.nodes[t].limbs != node.limbs for t in passthrough):
+            continue
+        steps[nid] = MultiRelinStep(
+            out=nid, level=node.limbs - 1,
+            cmults=[(t, dfg.nodes[t].args) for t in cmults],
+            passthrough=passthrough,
+        )
+        consumed |= visited - {nid}
+        claimed |= set(cmults)
+    return steps, consumed, claimed
+
+
 _DESCEND = {OpKind.CADD, OpKind.CSUB, OpKind.CSCALE, OpKind.PMUL,
             OpKind.PADD}
 
@@ -398,6 +561,21 @@ def lower_program(tc: TraceContext, fusion: bool = False,
                     multi[st.out] = st
                 consumed |= interior
 
+    # Relinearization: CMULTs join the keyswitch family.  exact=False
+    # first merges sum-of-CMult closures into single-ModDown
+    # MultiRelinSteps; every remaining CMULT lowers to a (bit-exact)
+    # RelinStep on the engine's relin entry point.
+    multi_relin: dict[int, MultiRelinStep] = {}
+    if not exact:
+        blocked = (consumed | set(hoisted) | set(multi))
+        multi_relin, r_consumed, r_claimed = _relin_closures(dfg, blocked)
+        consumed |= r_consumed | r_claimed
+    relin: dict[int, RelinStep] = {}
+    for nid, node in dfg.nodes.items():
+        if node.op == OpKind.CMULT and nid not in consumed:
+            relin[nid] = RelinStep(out=nid, level=node.limbs - 1,
+                                   args=tuple(node.args))
+
     # Order steps along the topo order; the first (multi-)hoisted step
     # touching an anchor performs its (shared) ModUp.
     steps: list = []
@@ -419,6 +597,10 @@ def lower_program(tc: TraceContext, fusion: bool = False,
                                  if a not in seen_anchor]
             seen_anchor.update(term_anchors)
             steps.append(mst)
+        elif nid in relin:
+            steps.append(relin[nid])
+        elif nid in multi_relin:
+            steps.append(multi_relin[nid])
         elif nid in consumed:
             continue
         else:

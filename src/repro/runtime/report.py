@@ -19,7 +19,10 @@ from repro.dfg.hoist import (
     OpVolumes, evk_words, ip_volumes, moddown_volumes, modup_volumes,
 )
 from repro.runtime.compile import CompiledProgram
-from repro.runtime.lower import HoistedStep, MultiHoistedStep
+from repro.runtime.lower import (
+    HoistedStep, KeyswitchFamilyStep, MultiHoistedStep, MultiRelinStep,
+    RelinStep,
+)
 
 
 def _keyswitch_volumes(l: int, k: int, alpha: int, N: int,
@@ -86,14 +89,36 @@ def step_volumes(compiled: CompiledProgram, step,
         # base-domain adds for the passthrough terms
         v.ewo_words = len(step.passthrough) * 2 * l * N
         return v
+    if isinstance(step, RelinStep):
+        l = step.level + 1
+        v = _keyswitch_volumes(l, k, alpha, N)
+        v.ewo_words += 4 * l * N      # tensor-product EWOs
+        v.relin_count = 1
+        return v
+    if isinstance(step, MultiRelinStep):
+        l = step.level + 1
+        n = step.n_relin
+        v = OpVolumes()
+        for _ in range(n):
+            v = v + modup_volumes(l, k, alpha, N)
+            v = v + ip_volumes(l, k, alpha, N)
+        v = v + moddown_volumes(l, k, alpha, N, 2)
+        v.keyswitch_count = n
+        v.relin_count = n
+        # ONE shared mult key serves every merged term
+        v.evk_set_words = evk_words(l, k, alpha, N)
+        v.ewo_words = (n * 4 * l * N
+                       + len(step.passthrough) * 2 * l * N)
+        dnum = -(-l // alpha)
+        v.comm_up_words = n * dnum * (l + k) * N
+        v.comm_down_words = 2 * (l + k) * N
+        return v
     node = compiled.dfg.nodes[step.nid]
     l = node.limbs
+    # no eager CMULT branch: lower_program turns every CMULT into a
+    # RelinStep (or merges it into a MultiRelinStep), handled above
     if node.op in (OpKind.ROT, OpKind.CONJ):
         return _keyswitch_volumes(l, k, alpha, N)
-    if node.op == OpKind.CMULT:
-        v = _keyswitch_volumes(l, k, alpha, N)
-        v.ewo_words += 4 * l * N
-        return v
     if node.op in (OpKind.PMUL, OpKind.CADD, OpKind.CSUB, OpKind.CSCALE,
                    OpKind.PADD):
         v = OpVolumes()
@@ -147,6 +172,7 @@ class ExecutionReport:
             "moddown": (e.moddown, p.moddown_count * b),
             "ip": (e.ip, p.ip_count * b),
             "keyswitch": (e.keyswitch, p.keyswitch_count * b),
+            "relin": (e.relin, p.relin_count * b),
         }
         out["counts_match"] = all(a == x for a, x in out.values())
         ks_ntt = p.modup_ntt_words + p.moddown_ntt_words
@@ -178,7 +204,9 @@ class ExecutionReport:
             v = step_volumes(compiled, step)
             if v is None:
                 continue
-            if isinstance(step, (HoistedStep, MultiHoistedStep)):
+            if isinstance(step, KeyswitchFamilyStep):
+                # rotation AND relin blocks stream through 2*dnum
+                # pipeline groups with per-digit ModUp leg weights
                 dnum = -(-(step.level + 1) // alpha)
             elif v.keyswitch_count:
                 dnum = -(-compiled.dfg.nodes[step.nid].limbs // alpha)

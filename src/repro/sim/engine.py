@@ -194,9 +194,12 @@ def simulate_blocks(blocks: list[Block], hw: HWConfig, name: str,
         res.mem_stall_s = sched.mem_stall_s
         res.timelines = sched.timelines()
         res.engine_busy_s = {e: sched.busy(e) for e in ENGINES}
+        # energy integrated over the placed per-engine busy intervals
+        res.energy_j = sched.energy_j(hw)
+        return res
     link_bytes = (res.volumes.comm_words + res.volumes.evk_load_words) \
         * WORD_BYTES
-    # busy-time dynamic power + 10% static floor
+    # analytic mode: busy-time dynamic power + 10% static floor
     res.energy_j = (
         hw.power_xpu_w * (res.xpu_busy_s + 0.10 * res.latency_s)
         + hw.power_xmu_w * (res.xmu_busy_s + 0.10 * res.latency_s)
@@ -257,7 +260,12 @@ def simulate_program(dfg, hw: HWConfig, strategy: str = "hoist",
     for v in extra:
         # relin/conj keys are shared program-wide; identity by size
         key = (("relin", v.evk_set_words), v.evk_set_words)
-        blocks.append(Block(v, max(1, v.ip_count), (key,),
+        # relin/conj blocks stream the 2*dnum group pipeline like every
+        # other keyswitch; the real dnum is the ModUp leg count (one leg
+        # per decomposition digit), so their xPU up-phase slices carry
+        # per-digit weights instead of one undifferentiated volume lump
+        dnum = len(v.modup_legs) if v.modup_legs else v.ip_count
+        blocks.append(Block(v, max(1, dnum), (key,),
                             df_mode != "IRF"))
     blocks.append(Block(residual, 1))
     return simulate_blocks(

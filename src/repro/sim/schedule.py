@@ -129,6 +129,32 @@ class Schedule:
     def mem_stall_s(self) -> float:
         return self.exposed_time((EVK,), (XPU, XMU, LINK))
 
+    # ---- energy integrated over the timelines --------------------------
+    def busy_integral(self, engines: tuple[str, ...]) -> float:
+        """Seconds covered by the merged busy intervals of ``engines``."""
+        return sum(e - s for s, e in self._busy_intervals(engines))
+
+    def energy_breakdown(self, hw: HWConfig) -> dict[str, float]:
+        """Per-engine energy from the placed timelines.
+
+        Dynamic power integrates over each engine's merged
+        ``_busy_intervals`` (not pre-scheduling busy-time totals), plus
+        the 10% static floor over the makespan; link/evk energy charges
+        the bytes actually streamed during their busy intervals
+        (interval seconds x link bandwidth x pJ/B) — post-cache evk
+        traffic, not the raw EVF volume estimate."""
+        static = 0.10 * self.makespan
+        moved = (self.busy_integral((LINK,)) + self.busy_integral((EVK,)))
+        link_bytes = moved * hw.hbm_bw_tbs * 1e12
+        return {
+            XPU: hw.power_xpu_w * (self.busy_integral((XPU,)) + static),
+            XMU: hw.power_xmu_w * (self.busy_integral((XMU,)) + static),
+            LINK: link_bytes * hw.link_pj_per_byte * 1e-12,
+        }
+
+    def energy_j(self, hw: HWConfig) -> float:
+        return sum(self.energy_breakdown(hw).values())
+
 
 class _TaskGraph:
     def __init__(self) -> None:

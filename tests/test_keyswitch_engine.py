@@ -175,8 +175,8 @@ def test_jit_one_trace_per_level(ectx, enc):
     lvl = ct.level
     eng = ectx.engine
     ectx.multiply(ct, ct)
-    ectx.multiply(ct, ct)
-    assert eng.trace_counts[("keyswitch", lvl)] == 1
+    ectx.multiply(ct, ct)          # CMult dispatches the relin plan
+    assert eng.trace_counts[("relin", lvl, False)] == 1
     ectx.rotate(ct, 1)
     ectx.rotate(ct, 9)     # different step, same plan
     ectx.conjugate(ct)     # different galois, same plan
