@@ -86,11 +86,11 @@ def run() -> list[str]:
 
     params = CKKSParams(logN=logn, L=L, alpha=alpha, k=k, q_bits=29,
                         scale_bits=29, q0_bits=30)
-    ctx = CKKSContext(params, seed=7, hamming_weight=8)
+    ctx = CKKSContext(params, seed=7 + common.SEED, hamming_weight=8)
     btp = Bootstrapper(ctx, n_groups=2 if common.SMOKE else 3,
                        mod_K=mod_K, cheb_degree=cheb_degree)
     nh = params.num_slots
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(common.SEED)
     z = (rng.normal(size=nh) + 1j * rng.normal(size=nh)) * 0.01
     ct0 = ctx.encrypt(z, level=0)
 

@@ -69,14 +69,14 @@ def run() -> list[str]:
     reps_seed = 1 if common.SMOKE else 2
     reps_engine = 3 if common.SMOKE else 10
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(common.SEED)
     summary: dict = {"params": {"logN": logn, "L": 5, "alpha": 2, "dnum": 3,
                                 "rotations": len(steps)},
                      "pallas_logN": pallas_logn}
     lines = []
 
     p = _params(logn)
-    ctx = CKKSContext(p, seed=3)
+    ctx = CKKSContext(p, seed=3 + common.SEED)
     nh = p.num_slots
     z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
     ct = ctx.encrypt(z)
@@ -91,7 +91,7 @@ def run() -> list[str]:
 
     # Pallas backend (interpret mode off-TPU): parity record, 1 rep.
     pp = _params(pallas_logn)
-    ctx_p = CKKSContext(pp, seed=3, backend="pallas")
+    ctx_p = CKKSContext(pp, seed=3 + common.SEED, backend="pallas")
     zp = rng.normal(size=pp.num_slots) + 1j * rng.normal(size=pp.num_slots)
     ct_p = ctx_p.encrypt(zp)
     pts_p = [ctx_p.encode(rng.normal(size=pp.num_slots)) for _ in steps]

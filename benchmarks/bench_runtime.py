@@ -66,9 +66,9 @@ def run() -> list[str]:
     reps = 2 if common.SMOKE else 3
 
     params = _params(logn)
-    ctx = CKKSContext(params, seed=3)
+    ctx = CKKSContext(params, seed=3 + common.SEED)
     nh = params.num_slots
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(common.SEED)
     diags = {d: rng.normal(size=nh) for d in range(n_diag)}
     zs = [rng.normal(size=nh) + 1j * rng.normal(size=nh)
           for _ in range(batch)]

@@ -26,6 +26,13 @@ BS_BASE = 4   # SHARP's baseline baby-step (Fig. 7(a))
 # Toggled by benchmarks.run.
 SMOKE = False
 
+# --seed N: shared base seed for every stochastic benchmark input
+# (plaintext draws, tenant keygen offsets, Poisson arrival traces).
+# The analytic figure modules ignore it; the measured benches derive
+# all their rngs from it so a run is replayable end to end.
+# Toggled by benchmarks.run.
+SEED = 0
+
 
 def smoke_subset(benches: list[str]) -> list[str]:
     return benches[:1] if SMOKE else benches

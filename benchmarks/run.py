@@ -3,9 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV lines and writes JSON results to
 benchmarks/results/ (consumed by EXPERIMENTS.md).
 
-Usage: python -m benchmarks.run [table4|fig14|...|all] [--smoke]
+Usage: python -m benchmarks.run [table4|fig14|...|all]
+                                [--smoke] [--seed N] [--list]
 
 --smoke restricts every module to its cheapest workload (CI fast path).
+--seed  sets the shared base seed (``benchmarks.common.SEED``) that the
+        measured benches derive plaintexts, tenant keys, and arrival
+        traces from; analytic figure modules are seed-free.
+--list  prints the available module names with a one-line description
+        and exits.
 """
 from __future__ import annotations
 
@@ -15,8 +21,8 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        bench_bootstrap, bench_keyswitch, bench_runtime, common,
-        fig6_parallelism, fig7_bsgs, fig14_ablation, fig15_hero,
+        bench_bootstrap, bench_keyswitch, bench_runtime, bench_serving,
+        common, fig6_parallelism, fig7_bsgs, fig14_ablation, fig15_hero,
         fig16_util, fig17_sensitivity, table1_ai, table4_end2end,
     )
 
@@ -26,6 +32,7 @@ def main() -> None:
         "keyswitch": bench_keyswitch,
         "runtime": bench_runtime,
         "bootstrap": bench_bootstrap,
+        "serving": bench_serving,
         "fig6": fig6_parallelism,
         "fig7": fig7_bsgs,
         "fig14": fig14_ablation,
@@ -33,8 +40,19 @@ def main() -> None:
         "fig16": fig16_util,
         "fig17": fig17_sensitivity,
     }
-    args = [a for a in sys.argv[1:] if a != "--smoke"]
-    common.SMOKE = "--smoke" in sys.argv[1:]
+    argv = sys.argv[1:]
+    if "--list" in argv:
+        for name, mod in modules.items():
+            doc = (mod.__doc__ or "").strip().splitlines()
+            print(f"{name:<12} {doc[0] if doc else ''}")
+        return
+    common.SMOKE = "--smoke" in argv
+    args, it = [], iter(argv)
+    for a in it:
+        if a == "--seed":
+            common.SEED = int(next(it))
+        elif not a.startswith("--"):
+            args.append(a)
     which = args[0] if args else "all"
     selected = modules if which == "all" else {which: modules[which]}
     print("name,us_per_call,derived")

@@ -20,12 +20,24 @@ path with one traced program per ``(level, dnum)`` plan:
 
 Every plan traces once under ``jax.jit`` and is cached; re-dispatch at
 the same level is a cache hit (``trace_counts`` records trace events).
+The cache key is the full dispatch SHAPE — op, level/dnum, hoisted term
+count, and (for the ``*_batched`` entry points) the leading batch
+width — and never key material: evk and plaintext tensors are separate
+per-``id(evk)`` device caches resolved at dispatch time.  One traced
+plan therefore serves every ciphertext owner; the multi-tenant serving
+layer (``repro.serve``) leans on exactly this split, sharing one
+engine's plans across tenants while swapping per-tenant ``KeyChain``s
+underneath, and treats ``(plan signature, batch width)`` as its
+admission-policy object (``docs/SERVING.md``).
 
 The compiled runtime (``repro.runtime``) drives three extensions of the
 same plans: ``modup``/``digits=`` split the hoisted entry point so one
-ModUp feeds every block anchored on the same ciphertext, the
-``*_batched`` entry points ``jax.vmap`` a whole batch of independent
-ciphertexts through one trace (jnp backend), and every dispatch tallies
+ModUp feeds every block anchored on the same ciphertext (callers pass
+``digits=`` to reuse a prior ``modup``'s stacked ``(dnum, l_ext, N)``
+tensor instead of paying a fresh ModUp), the ``*_batched`` entry
+points ``jax.vmap`` a whole batch of independent ciphertexts through
+one trace (jnp backend; a new batch width is a new trace, hence the
+serving layer's fixed-width padding), and every dispatch tallies
 ``OpCounters`` so reports can reconcile executed ModUp/ModDown/IP
 counts against ``dfg.hoist`` predictions.
 

@@ -29,7 +29,16 @@ the *functional* runtime:
   report  (report.ExecutionReport) — actual ModUp/ModDown/IP/NTT counts
           plus the engine's real (dnum, l_ext, N) plan shapes, cross-
           checked against ``dfg.hoist``'s predicted OpVolumes and fed
-          into the ``sim.schedule`` group pipeline.
+          into the ``sim.schedule`` group pipeline
+          (``report.program_blocks`` exposes the same per-block volumes
+          for arbitrary packed traffic, not just one program).
+
+The compiled artifacts are long-lived, key-free objects: a
+``CompiledProgram`` + the engine's jit plan caches serve requests from
+ANY tenant, which is what the serving layer (``repro.serve``) builds
+on — it packs `(tenant, program)` request batches into
+``run_batched``'s warmed shapes and swaps per-tenant keys underneath
+(see ``docs/SERVING.md``).
 """
 from repro.runtime.compile import (  # noqa: F401
     CompiledProgram, TraceContext, compile_program,

@@ -17,6 +17,17 @@ Two entry points:
   every ciphertext (``engine.trace_counts`` asserts this), elementwise
   ops broadcast over the leading ct axis, and plaintext/evk tensors are
   shared across the batch.  Results are bit-exact with the per-ct run.
+
+Plan-cache contract of ``run_batched``: the leading batch width is part
+of every traced shape, so a dispatch at a NEW width retraces each plan
+the program touches, while a repeated ``(program plan, width)`` pair is
+retrace-free — for ciphertexts from any source, because jit plans carry
+no key material (evk/plaintext tensors are looked up per dispatch).
+Callers that must never retrace on the request path — the serving layer
+(``repro.serve``) is the canonical one — pin a fixed set of widths up
+front and right-pad partial batches to the nearest warmed width
+(``serve.scheduler.PlanCache`` is the explicit admission policy over
+``(plan signature, width)`` pairs).
 """
 from __future__ import annotations
 

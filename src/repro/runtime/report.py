@@ -8,6 +8,12 @@ asserts the counts agree exactly; ``scheduled_result`` feeds the
 per-block volumes into the event-driven group scheduler
 (``repro.sim.schedule``) so a functional execution yields the paper's
 performance-model latency for the very plan that just ran.
+
+``program_blocks`` exposes the same lowering->sim-block translation as
+a standalone function: the scheduler consumes ANY packed block stream,
+and the serving layer (``repro.serve.simfeed``) concatenates the blocks
+of a whole multi-program batch log to replay live traffic on the
+hardware timelines.
 """
 from __future__ import annotations
 
@@ -139,6 +145,33 @@ def step_volumes(compiled: CompiledProgram, step,
     return None
 
 
+def program_blocks(compiled: CompiledProgram, batch: int = 1) -> list:
+    """Sim blocks of one compiled program executed over ``batch`` cts.
+
+    Keyswitch-family steps stream through 2*dnum pipeline groups with
+    per-digit ModUp leg weights; volumes scale linearly with the batch.
+    Shared by ``ExecutionReport.scheduled_result`` and the serving
+    layer's traffic replay (``repro.serve.simfeed``)."""
+    from repro.sim.engine import Block
+
+    alpha = compiled.params.alpha
+    blocks = []
+    for step in compiled.steps:
+        v = step_volumes(compiled, step)
+        if v is None:
+            continue
+        if isinstance(step, KeyswitchFamilyStep):
+            # rotation AND relin blocks stream through 2*dnum
+            # pipeline groups with per-digit ModUp leg weights
+            dnum = -(-(step.level + 1) // alpha)
+        elif v.keyswitch_count:
+            dnum = -(-compiled.dfg.nodes[step.nid].limbs // alpha)
+        else:
+            dnum = 1
+        blocks.append(Block(v.scaled(batch), max(dnum, 1)))
+    return blocks
+
+
 def predicted_volumes(compiled: CompiledProgram,
                       shared_modup: bool = True) -> OpVolumes:
     total = OpVolumes()
@@ -196,24 +229,10 @@ class ExecutionReport:
                          mode: str = "pipelined"):
         """Feed the executed plan's per-block volumes into the sim's
         event-driven group scheduler -> predicted hardware latency."""
-        from repro.sim.engine import Block, simulate_blocks
+        from repro.sim.engine import simulate_blocks
 
-        alpha = compiled.params.alpha
-        blocks = []
-        for step in compiled.steps:
-            v = step_volumes(compiled, step)
-            if v is None:
-                continue
-            if isinstance(step, KeyswitchFamilyStep):
-                # rotation AND relin blocks stream through 2*dnum
-                # pipeline groups with per-digit ModUp leg weights
-                dnum = -(-(step.level + 1) // alpha)
-            elif v.keyswitch_count:
-                dnum = -(-compiled.dfg.nodes[step.nid].limbs // alpha)
-            else:
-                dnum = 1
-            blocks.append(Block(v.scaled(self.batch), max(dnum, 1)))
-        return simulate_blocks(blocks, hw, name="runtime", mode=mode)
+        return simulate_blocks(program_blocks(compiled, self.batch), hw,
+                               name="runtime", mode=mode)
 
 
 def build_report(compiled: CompiledProgram, ctx, executed: OpCounters,

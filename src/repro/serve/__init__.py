@@ -1,0 +1,40 @@
+"""repro.serve — multi-tenant continuous-batching FHE serving layer.
+
+PRs 1-5 built a compiled, batched engine that executes ONE ciphertext
+program at a time; this package turns it into a *server*: an open-loop
+Poisson arrival stream of ``(tenant, program_id, ct)`` jobs is queued,
+packed into the engine's existing ``*_batched`` jit plans without
+retracing, executed under per-tenant keys, measured, and replayed onto
+the paper's hardware timelines.
+
+  workload  (serve.workload)  — seeded open-loop Poisson traces:
+            ``Arrival(t, tenant, program_id)``;
+  queue     (serve.queue)     — bounded FIFO with (tenant, program)
+            batch-class views; rejection = backpressure;
+  scheduler (serve.scheduler) — continuous batching (max-batch /
+            max-wait, oldest-head-first groups) + the plan-cache
+            admission policy over ``(level, dnum)`` plan signatures;
+  registry  (serve.registry)  — per-tenant KeyChains on ONE shared
+            engine, bounded LRU eviction that never touches an
+            in-flight tenant, evk tensor caches purged on eviction;
+  server    (serve.server)    — the virtual-clock serving loop +
+            serial baseline; logs every batch as a ``BatchRecord``;
+  metrics   (serve.metrics)   — throughput, nearest-rank p50/p99
+            latency, batch occupancy, cache hit rates, queue depth —
+            per tenant and aggregate (``ServingReport``);
+  simfeed   (serve.simfeed)   — replay the batch log onto the
+            ``sim.schedule`` group-pipeline timelines: what would the
+            HE^2 hardware do with this traffic.
+
+See ``docs/SERVING.md`` for the operator's guide and
+``benchmarks/bench_serving.py`` for the gated end-to-end run.
+"""
+from repro.serve.metrics import ServingReport, percentile  # noqa: F401
+from repro.serve.queue import Request, RequestQueue  # noqa: F401
+from repro.serve.registry import TenantRegistry  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousBatcher, PlanCache, plan_signature,
+)
+from repro.serve.server import BatchRecord, FHEServer  # noqa: F401
+from repro.serve.simfeed import replay_on_hardware  # noqa: F401
+from repro.serve.workload import Arrival, poisson_trace  # noqa: F401

@@ -1,0 +1,97 @@
+"""Serving metrics: latency percentiles, throughput, occupancy, caches.
+
+All latencies live on the server's virtual clock (arrival timestamps
+from the open-loop trace; service time measured wall-clock per executed
+batch and added to the clock), so ``latency = completion - arrival``
+mixes queueing delay and real engine time in the same unit (seconds).
+
+Percentiles use the nearest-rank definition
+(``sorted[ceil(p/100 * n) - 1]``) — exact on small samples, so the
+metrics-arithmetic test can assert them from first principles.
+
+``ServingReport`` is the ``ExecutionReport``-style structured record:
+one aggregate view plus a per-tenant breakdown, each a plain dict ready
+for ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def percentile(values: list[float], p: float) -> float:
+    """Nearest-rank percentile; 0 on an empty sample."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    rank = max(1, math.ceil(p / 100.0 * len(s)))
+    return s[min(rank, len(s)) - 1]
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant accumulator: latencies in virtual seconds."""
+
+    completed: int = 0
+    rejected: int = 0
+    latencies: list[float] = dataclasses.field(default_factory=list)
+
+    def record(self, latency_s: float) -> None:
+        self.completed += 1
+        self.latencies.append(latency_s)
+
+    def summary(self, span_s: float) -> dict:
+        return {
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "throughput_ops": (self.completed / span_s) if span_s else 0.0,
+            "p50_latency_s": percentile(self.latencies, 50),
+            "p99_latency_s": percentile(self.latencies, 99),
+            "mean_latency_s": (sum(self.latencies) / len(self.latencies)
+                               if self.latencies else 0.0),
+        }
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """Structured record of one serving run (per tenant + aggregate)."""
+
+    span_s: float                     # virtual makespan of the run
+    completed: int
+    rejected: int
+    batches: int
+    batch_occupancy: float            # mean real/max slots per batch
+    plan_cache: dict                  # admission-policy hits/misses
+    registry: dict                    # TenantRegistry.stats()
+    queue: dict                       # depth stats + rejections
+    tenants: dict[str, dict]          # tenant -> TenantStats.summary()
+    latencies_s: list[float] = dataclasses.field(default_factory=list,
+                                                 repr=False)
+
+    @property
+    def throughput_ops(self) -> float:
+        return self.completed / self.span_s if self.span_s else 0.0
+
+    @property
+    def p50_latency_s(self) -> float:
+        return percentile(self.latencies_s, 50)
+
+    @property
+    def p99_latency_s(self) -> float:
+        return percentile(self.latencies_s, 99)
+
+    def to_dict(self) -> dict:
+        return {
+            "span_s": self.span_s,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "batches": self.batches,
+            "throughput_ops": self.throughput_ops,
+            "p50_latency_s": self.p50_latency_s,
+            "p99_latency_s": self.p99_latency_s,
+            "batch_occupancy": self.batch_occupancy,
+            "plan_cache": self.plan_cache,
+            "registry": self.registry,
+            "queue": self.queue,
+            "tenants": self.tenants,
+        }

@@ -1,0 +1,132 @@
+"""Per-tenant key/evk registry over ONE shared engine.
+
+Multi-tenant serving separates two kinds of state the single-program
+runtime kept fused together:
+
+* **jit plans** (``KeyswitchEngine._batch_fns`` et al.) are keyed on
+  ``(op, level, shape)`` and contain NO key material — they are shared
+  by every tenant, which is exactly what makes cross-tenant serving
+  retrace-free: tenant B's first request reuses the plan tenant A
+  traced.
+* **key material** (secret key, mult/conj keys, per-step rotation evks)
+  is per tenant.  The registry owns one ``KeyChain`` per tenant, seeded
+  deterministically, and installs it on the shared ``CKKSContext`` for
+  the duration of a ``lease`` — the engine's evk *tensor* caches are
+  keyed by ``id(evk)`` so tenants never collide (ARK-style
+  inter-operation key reuse happens per tenant, across that tenant's
+  blocks and batches).
+
+Eviction is bounded-LRU over tenants: creating tenant ``capacity + 1``
+evicts the least-recently-used tenant that is **not in flight** (an
+active lease pins its keys — evicting mid-batch would invalidate evk
+tensors the running jit dispatch still references).  Eviction also
+purges the engine's stacked/Montgomery evk tensors for the dead
+tenant's keys, so registry memory is genuinely bounded.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.core.ckks import CKKSContext
+from repro.core.keys import KeyChain
+
+
+class TenantRegistry:
+    """Bounded LRU of per-tenant ``KeyChain``s bound to one context."""
+
+    def __init__(self, ctx: CKKSContext, capacity: int = 8,
+                 base_seed: int = 1000):
+        assert capacity > 0
+        self.ctx = ctx
+        self.capacity = capacity
+        self.base_seed = base_seed
+        self._chains: dict[str, KeyChain] = {}   # insertion = LRU order
+        self._seeds: dict[str, int] = {}
+        self._inflight: dict[str, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._chains
+
+    def __len__(self) -> int:
+        return len(self._chains)
+
+    # ------------------------- keychains -------------------------------
+    def _tenant_seed(self, tenant: str) -> int:
+        """Stable per-tenant seed: the tenant's keys survive eviction +
+        re-admission bit-identically (re-keygen, not re-keying)."""
+        if tenant not in self._seeds:
+            self._seeds[tenant] = self.base_seed + len(self._seeds)
+        return self._seeds[tenant]
+
+    def keychain(self, tenant: str) -> KeyChain:
+        """The tenant's keys, creating (and possibly evicting) on miss."""
+        if tenant in self._chains:
+            self.hits += 1
+            self._chains[tenant] = self._chains.pop(tenant)  # LRU bump
+            return self._chains[tenant]
+        self.misses += 1
+        while len(self._chains) >= self.capacity:
+            if not self._evict_one():
+                break        # every resident tenant is in flight
+        kc = KeyChain(self.ctx.params, self.ctx.pc,
+                      seed=self._tenant_seed(tenant))
+        self._chains[tenant] = kc
+        return kc
+
+    def _evict_one(self) -> bool:
+        """Drop the LRU tenant that is not in flight; purge its evk
+        tensors from the engine caches.  False if none is evictable."""
+        for tenant in self._chains:        # insertion order == LRU order
+            if self._inflight.get(tenant, 0) == 0:
+                kc = self._chains.pop(tenant)
+                self._purge_engine_caches(kc)
+                self.evictions += 1
+                return True
+        return False
+
+    def _purge_engine_caches(self, kc: KeyChain) -> None:
+        engine = self.ctx.engine
+        dead = {id(k) for k in kc._rot_keys.values()}
+        for k in (kc._mult_key, kc._conj_key):
+            if k is not None:
+                dead.add(id(k))
+        engine._evk_full = {i: v for i, v in engine._evk_full.items()
+                            if i not in dead}
+        engine._evk_level = {k: v for k, v in engine._evk_level.items()
+                             if k[0] not in dead}
+        engine._evk_group = {k: v for k, v in engine._evk_group.items()
+                             if not (set(k[0]) & dead)}
+
+    # ------------------------- leases ----------------------------------
+    @contextlib.contextmanager
+    def lease(self, tenant: str):
+        """Install the tenant's keys on the shared context and pin them
+        against eviction while the lease is held (re-entrant)."""
+        kc = self.keychain(tenant)
+        prev = self.ctx.keys
+        self.ctx.keys = kc
+        self._inflight[tenant] = self._inflight.get(tenant, 0) + 1
+        try:
+            yield kc
+        finally:
+            self._inflight[tenant] -= 1
+            if self._inflight[tenant] == 0:
+                del self._inflight[tenant]
+            self.ctx.keys = prev
+
+    def inflight(self, tenant: str) -> bool:
+        return self._inflight.get(tenant, 0) > 0
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "tenants_resident": len(self._chains),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hits / total if total else 1.0,
+        }

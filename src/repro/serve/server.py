@@ -1,0 +1,245 @@
+"""The serving loop: open-loop arrivals -> queue -> packed batches.
+
+``FHEServer`` binds the pieces together on ONE shared
+``CKKSContext``/``KeyswitchEngine``:
+
+    arrivals (serve.workload)  --admit-->  RequestQueue (bounded FIFO)
+        --pick-->  ContinuousBatcher (max-batch / max-wait, per
+                   (tenant, program) groups, oldest-head-first)
+        --admission-->  PlanCache ((signature, batch) warm set)
+        --lease-->  TenantRegistry (per-tenant keys on the shared ctx)
+        --execute-->  ProgramExecutor.run_batched (one vmap dispatch,
+                      padded to the warmed batch shape)
+        --record-->  ServingReport + BatchRecord log (simfeed replays
+                     the log onto the sim.schedule timelines)
+
+Time model: a **virtual clock**.  Arrival timestamps come from the
+open-loop trace; every executed batch advances the clock by its
+*measured* wall-clock duration (jit dispatch + device sync).  Request
+latency = completion - arrival on that clock, so queueing delay and
+engine time land in the same unit while the arrival process stays
+deterministic and replayable (same ``--seed``, same trace, both
+baselines, and the simulator half all see identical traffic).
+
+The serial baseline (:meth:`FHEServer.run_serial`) answers the gate
+question: same trace, same virtual clock, but every request executes
+alone (batch slots = 1) in strict arrival order — what a
+one-request-at-a-time service would do with the same traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.ckks import CKKSContext, Ciphertext
+from repro.runtime import CompiledProgram, ProgramExecutor
+from repro.serve.metrics import ServingReport, TenantStats
+from repro.serve.queue import RequestQueue
+from repro.serve.registry import TenantRegistry
+from repro.serve.scheduler import (
+    ContinuousBatcher, PackedBatch, PlanCache, plan_signature,
+)
+from repro.serve.workload import Arrival
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """One executed batch on the virtual timeline (simfeed's input)."""
+
+    start_s: float                # virtual launch time
+    duration_s: float             # measured wall-clock service time
+    tenant: str
+    program_id: str
+    n_real: int                   # requests actually served
+    batch: int                    # padded dispatch width
+    plan_hit: bool                # admission policy verdict
+    rids: list[int]
+
+
+class FHEServer:
+    """Multi-tenant continuous-batching server over compiled programs."""
+
+    def __init__(self, ctx: CKKSContext, max_batch: int = 4,
+                 max_wait_s: float = 0.05, queue_size: int = 256,
+                 registry: TenantRegistry | None = None,
+                 keep_outputs: bool = True):
+        if not ctx.use_engine:
+            raise NotImplementedError(
+                "serving requires the batched engine (use_engine=True)")
+        self.ctx = ctx
+        self.executor = ProgramExecutor(ctx)
+        self.registry = registry if registry is not None \
+            else TenantRegistry(ctx)
+        self.queue = RequestQueue(queue_size)
+        self.batcher = ContinuousBatcher(max_batch, max_wait_s)
+        self.plan_cache = PlanCache()
+        self.programs: dict[str, CompiledProgram] = {}
+        self._signatures: dict[str, tuple] = {}
+        self.records: list[BatchRecord] = []
+        self.keep_outputs = keep_outputs
+        self.outputs: dict[int, dict[str, Ciphertext]] = {}
+        self._tenants: dict[str, TenantStats] = {}
+
+    # ------------------------- programs --------------------------------
+    def register_program(self, program_id: str,
+                         compiled: CompiledProgram) -> tuple:
+        """Admit a compiled program; returns its engine-plan signature."""
+        self.programs[program_id] = compiled
+        self._signatures[program_id] = plan_signature(compiled)
+        return self._signatures[program_id]
+
+    def warmup(self, tenant: str, program_id: str,
+               inputs: dict[str, Ciphertext],
+               width: int | None = None) -> None:
+        """Trace the program's jit plans at the serving batch shape by
+        executing one padded batch (admission-policy MISS paid here, so
+        live traffic is retrace-free from the first request).
+        ``width`` defaults to the scheduler's max_batch; pass 1 to warm
+        the serial baseline's shape."""
+        B = self.batcher.max_batch if width is None else width
+        self.plan_cache.admit(self._signatures[program_id], B)
+        with self.registry.lease(tenant):
+            self.executor.run_batched(
+                self.programs[program_id],
+                {tag: [ct] * B for tag, ct in inputs.items()})
+
+    # ------------------------- submission ------------------------------
+    def _stats(self, tenant: str) -> TenantStats:
+        if tenant not in self._tenants:
+            self._tenants[tenant] = TenantStats()
+        return self._tenants[tenant]
+
+    def submit(self, tenant: str, program_id: str,
+               inputs: dict[str, Ciphertext], arrival: float) -> bool:
+        """Queue one request; False = rejected (bounded-queue
+        backpressure, tallied per tenant)."""
+        assert program_id in self.programs, f"unknown {program_id}"
+        req = self.queue.offer(tenant, program_id, inputs, arrival)
+        if req is None:
+            self._stats(tenant).rejected += 1
+            return False
+        return True
+
+    # ------------------------- execution -------------------------------
+    def _execute(self, batch: PackedBatch, now: float,
+                 width: int | None = None) -> float:
+        """Dispatch one packed batch padded to ``width`` slots.
+
+        ``width=None`` picks the smallest already-warm bucket that fits
+        the real requests (falling back to max_batch), so a partial
+        batch only pays for the nearest warmed shape, never a retrace.
+        """
+        compiled = self.programs[batch.program_id]
+        sig = self._signatures[batch.program_id]
+        if width is None:
+            fits = [w for w in self.plan_cache.warm_widths(sig)
+                    if w >= len(batch.requests)]
+            B = min(fits) if fits else self.batcher.max_batch
+        else:
+            B = width
+        hit = self.plan_cache.admit(sig, B)
+        reqs = batch.requests
+        pad = B - len(reqs)
+        stacked = {
+            tag: ([r.inputs[tag] for r in reqs]
+                  + [reqs[-1].inputs[tag]] * pad)
+            for tag in compiled.inputs
+        }
+        with self.registry.lease(batch.tenant):
+            t0 = time.perf_counter()
+            res = self.executor.run_batched(compiled, stacked)
+            for cts in res.outputs.values():
+                cts[0].c0.block_until_ready()
+            dt = time.perf_counter() - t0
+        if self.keep_outputs:
+            for j, r in enumerate(reqs):
+                self.outputs[r.rid] = {tag: cts[j] for tag, cts
+                                       in res.outputs.items()}
+        self.records.append(BatchRecord(
+            start_s=now, duration_s=dt, tenant=batch.tenant,
+            program_id=batch.program_id, n_real=len(reqs), batch=B,
+            plan_hit=hit, rids=[r.rid for r in reqs],
+        ))
+        return dt
+
+    def _complete(self, batch: PackedBatch, now: float) -> None:
+        for r in batch.requests:
+            self._stats(r.tenant).record(now - r.arrival)
+
+    # ------------------------- serving loops ---------------------------
+    def run_trace(self, trace: list[Arrival], inputs_for) -> ServingReport:
+        """Serve an open-loop arrival trace to completion.
+
+        ``inputs_for(arrival) -> {tag: Ciphertext}`` materializes each
+        request's ciphertexts; it runs under the tenant's key lease (so
+        ``ctx.encrypt`` uses the right secret) and OFF the virtual
+        clock — encryption is client-side work, not server time.
+        """
+        arr = sorted(trace, key=lambda a: a.t)
+        i, now = 0, 0.0
+        while True:
+            while i < len(arr) and arr[i].t <= now:
+                a = arr[i]
+                with self.registry.lease(a.tenant):
+                    inputs = inputs_for(a)
+                self.submit(a.tenant, a.program_id, inputs, a.t)
+                i += 1
+            drain = i >= len(arr)
+            batch = self.batcher.pick(self.queue, now, drain=drain)
+            if batch is None:
+                if drain and not self.queue:
+                    break
+                targets = [arr[i].t] if i < len(arr) else []
+                flush = self.batcher.next_flush_time(self.queue)
+                if flush is not None:
+                    targets.append(flush)
+                now = max(now, min(targets))
+                continue
+            now += self._execute(batch, now)
+            self._complete(batch, now)
+        return self.report(span_s=now)
+
+    def run_serial(self, trace: list[Arrival], inputs_for) -> ServingReport:
+        """Baseline: the same trace, one request at a time (no packing),
+        strict arrival order, on the same virtual clock."""
+        arr = sorted(trace, key=lambda a: a.t)
+        now = 0.0
+        for a in arr:
+            with self.registry.lease(a.tenant):
+                inputs = inputs_for(a)
+            req = self.queue.offer(a.tenant, a.program_id, inputs, a.t)
+            if req is None:
+                self._stats(a.tenant).rejected += 1
+                continue
+            now = max(now, a.t)
+            batch = PackedBatch((a.tenant, a.program_id), [req])
+            self.queue.take([req])
+            now += self._execute(batch, now, width=1)
+            self._complete(batch, now)
+        return self.report(span_s=now)
+
+    # ------------------------- reporting -------------------------------
+    def report(self, span_s: float) -> ServingReport:
+        lat_all = [v for s in self._tenants.values() for v in s.latencies]
+        depths = self.queue.depth_samples
+        occ = ([r.n_real / r.batch for r in self.records]
+               if self.records else [])
+        return ServingReport(
+            span_s=span_s,
+            completed=sum(s.completed for s in self._tenants.values()),
+            rejected=sum(s.rejected for s in self._tenants.values()),
+            batches=len(self.records),
+            batch_occupancy=(sum(occ) / len(occ)) if occ else 0.0,
+            plan_cache=self.plan_cache.stats(),
+            registry=self.registry.stats(),
+            queue={
+                "maxsize": self.queue.maxsize,
+                "max_depth": max(depths) if depths else 0,
+                "mean_depth": (sum(depths) / len(depths)) if depths
+                              else 0.0,
+                "rejected": self.queue.rejected,
+            },
+            tenants={t: s.summary(span_s)
+                     for t, s in sorted(self._tenants.items())},
+            latencies_s=lat_all,
+        )

@@ -1,0 +1,69 @@
+"""Open-loop arrival generation for the serving layer.
+
+Production FHE traffic (the ROADMAP's millions-of-users north star) is
+an *open loop*: requests arrive on their own schedule regardless of
+whether the server has finished the previous ones — the load regime
+where continuous batching wins and a serial request loop collapses.
+The generator here is a seeded Poisson process: exponential
+inter-arrival gaps at ``rate_rps``, each arrival stamped with a tenant
+and a program id drawn from (optionally weighted) mixes, so deep
+(Chebyshev/bootstrap-shaped) and shallow (matvec) programs interleave
+the way FLASH-FHE argues real deployments do.
+
+Determinism matters twice: the benchmark gate replays the same trace
+through the continuous-batching and serial baselines, and the simulator
+half (``repro.serve.simfeed``) replays the very same arrivals onto the
+``sim.schedule`` timelines.  Everything is derived from the single
+``seed`` argument (plumbed from ``benchmarks.run --seed``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One open-loop arrival: WHO asks for WHAT and WHEN (seconds)."""
+
+    t: float
+    tenant: str
+    program_id: str
+
+
+def _probs(names: list[str],
+           weights: dict[str, float] | None) -> np.ndarray | None:
+    if not weights:
+        return None
+    p = np.array([float(weights.get(n, 0.0)) for n in names])
+    if p.sum() <= 0:
+        raise ValueError("weights must have positive mass on the names")
+    return p / p.sum()
+
+
+def poisson_trace(rate_rps: float, n: int, tenants: list[str],
+                  programs: list[str], seed: int = 0,
+                  tenant_weights: dict[str, float] | None = None,
+                  program_weights: dict[str, float] | None = None,
+                  ) -> list[Arrival]:
+    """``n`` Poisson arrivals at ``rate_rps`` requests/second.
+
+    Inter-arrival gaps are iid Exponential(1/rate); tenant and program
+    of each arrival are drawn independently from the (optionally
+    weighted) name lists.  Fully determined by ``seed``.
+    """
+    if rate_rps <= 0:
+        raise ValueError("rate_rps must be positive")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    times = np.cumsum(gaps)
+    t_idx = rng.choice(len(tenants), size=n,
+                       p=_probs(tenants, tenant_weights))
+    p_idx = rng.choice(len(programs), size=n,
+                       p=_probs(programs, program_weights))
+    return [
+        Arrival(float(times[i]), tenants[int(t_idx[i])],
+                programs[int(p_idx[i])])
+        for i in range(n)
+    ]

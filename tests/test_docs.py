@@ -1,12 +1,16 @@
-"""Docs integrity: ARCHITECTURE.md links and module references resolve.
+"""Docs integrity: links and module references resolve.
 
-Two checks over ``docs/ARCHITECTURE.md`` (and the README):
+Three checks over ``docs/ARCHITECTURE.md``, ``docs/SERVING.md`` and the
+README:
   * every relative markdown link target exists on disk (anchors and
     external http(s) links are skipped);
   * every backticked repo path (``src/...``, ``benchmarks/...``,
     ``tests/...``, ``docs/...``) names a real file or directory — the
-    paper-to-module table must not drift from the tree.
+    paper-to-module tables must not drift from the tree;
+  * every dotted ``repro.*`` module the serving guide names imports —
+    the operator guide must track the package layout.
 """
+import importlib
 import pathlib
 import re
 
@@ -14,9 +18,11 @@ import pytest
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 ARCH = REPO / "docs" / "ARCHITECTURE.md"
+SERVING = REPO / "docs" / "SERVING.md"
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
 PATH_RE = re.compile(r"`((?:src|benchmarks|tests|docs|examples)/[^`*?]+)`")
+MODULE_RE = re.compile(r"`(repro(?:\.\w+)+)`")
 
 
 def test_architecture_doc_exists():
@@ -26,7 +32,16 @@ def test_architecture_doc_exists():
         assert section in text
 
 
-@pytest.mark.parametrize("doc", ["docs/ARCHITECTURE.md", "README.md"])
+def test_serving_doc_exists():
+    assert SERVING.is_file(), "docs/SERVING.md is part of the deal"
+    text = SERVING.read_text()
+    for section in ("Architecture", "Metrics", "Knobs",
+                    "Chebyshev workload to 3 tenants"):
+        assert section in text
+
+
+@pytest.mark.parametrize(
+    "doc", ["docs/ARCHITECTURE.md", "docs/SERVING.md", "README.md"])
 def test_doc_relative_links_resolve(doc):
     path = REPO / doc
     assert path.is_file()
@@ -40,9 +55,20 @@ def test_doc_relative_links_resolve(doc):
     assert not bad, f"{doc}: dead relative links: {bad}"
 
 
-def test_architecture_module_paths_resolve():
+@pytest.mark.parametrize("doc", [ARCH, SERVING])
+def test_doc_module_paths_resolve(doc):
     bad = []
-    for ref in PATH_RE.findall(ARCH.read_text()):
+    for ref in PATH_RE.findall(doc.read_text()):
         if not (REPO / ref).exists():
             bad.append(ref)
-    assert not bad, f"stale module references: {bad}"
+    assert not bad, f"{doc.name}: stale module references: {bad}"
+
+
+def test_serving_dotted_modules_import():
+    bad = []
+    for mod in sorted(set(MODULE_RE.findall(SERVING.read_text()))):
+        try:
+            importlib.import_module(mod)
+        except ImportError:
+            bad.append(mod)
+    assert not bad, f"SERVING.md names unimportable modules: {bad}"
