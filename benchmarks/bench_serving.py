@@ -21,6 +21,15 @@ ENFORCED gates: continuous batching must (a) beat the serial loop by
 >= 2x in completed-requests throughput on the virtual clock and
 (b) retrace NOTHING — the engine's jit ``trace_counts`` must be flat
 across the whole served trace.
+
+``--chaos`` (``benchmarks.common.CHAOS``) reruns the continuous loop
+under a seeded ``serve.faults.FaultPlan`` (5% transient engine faults
+plus key evictions, output corruption and latency spikes, all derived
+from ``common.SEED``) with per-request validation on, and gates on
+recovery: every request terminally accounted, no co-batched victim
+failures (quarantine bisect isolates poison), goodput >= 0.8x the
+fault-free run, and zero added retraces.  The chaos report merges into
+BENCH_serving.json under the ``"chaos"`` key.
 """
 from __future__ import annotations
 
@@ -36,6 +45,10 @@ RESULTS = pathlib.Path(__file__).parent / "results"
 
 # Perf regression gate (CI): continuous batching vs serial request loop.
 GATE_SERVING_SPEEDUP = 2.0
+
+# Chaos gate (CI, --chaos): goodput under the fault schedule must stay
+# within this fraction of the fault-free run's throughput.
+GATE_CHAOS_GOODPUT = 0.8
 
 TENANTS = ["alice", "bob", "carol"]
 
@@ -70,12 +83,13 @@ def _programs(params):
     return {"cheb": cheb, "matvec": matvec}
 
 
-def _serve(ctx, programs, trace, max_batch: int, serial: bool):
+def _serve(ctx, programs, trace, max_batch: int, serial: bool,
+           faults=None, validate: bool = False):
     """One serving run on a fresh server (shared ctx/registry keys)."""
     from repro.serve import FHEServer
 
     server = FHEServer(ctx, max_batch=max_batch, max_wait_s=0.15,
-                       keep_outputs=False)
+                       keep_outputs=False, faults=faults, max_retries=4)
     for pid, comp in programs.items():
         server.register_program(pid, comp)
     nh = ctx.params.num_slots
@@ -104,19 +118,123 @@ def _serve(ctx, programs, trace, max_batch: int, serial: bool):
     before = dict(ctx.engine.trace_counts)     # post-warmup snapshot
     t0 = time.perf_counter()
     if serial:
-        rep = server.run_serial(trace, inputs_for)
+        rep = server.run_serial(trace, inputs_for, validate=validate)
     else:
-        rep = server.run_trace(trace, inputs_for)
+        rep = server.run_trace(trace, inputs_for, validate=validate)
     wall = time.perf_counter() - t0
     after = dict(ctx.engine.trace_counts)
     retraces = (sum(after.values()) - sum(before.values()))
     return server, rep, wall, retraces
 
 
+def _run_chaos() -> list[str]:
+    """Chaos-mode serving run (``--chaos``): seeded fault schedule,
+    recovery gates, results merged under BENCH_serving.json["chaos"]."""
+    from repro.core.ckks import CKKSContext
+    from repro.serve import FaultInjector, FaultPlan, poisson_trace
+
+    RESULTS.mkdir(exist_ok=True)
+    logn = 8 if common.SMOKE else 9
+    n_req = 64 if common.SMOKE else 96
+    max_batch = 8
+    rate = 200.0
+
+    params = _params(logn)
+    ctx = CKKSContext(params, seed=3 + common.SEED)
+    programs = _programs(params)
+    trace = poisson_trace(rate, n_req, TENANTS, list(programs),
+                          seed=common.SEED,
+                          program_weights={"cheb": 0.75, "matvec": 0.25})
+
+    # fault-free reference: same trace, same engine, no injection.
+    # Validation stays ON here too — the invariant checker's device
+    # syncs are a real serving cost both runs pay, so the goodput
+    # ratio isolates the FAULTS' overhead (retries, backoff, spikes),
+    # not the checker's.
+    _, rep_clean, _, _ = _serve(ctx, programs, trace, max_batch,
+                                serial=False, validate=True)
+    tput_clean = rep_clean.completed / rep_clean.span_s
+
+    # 5% transient-fault schedule + evictions/corruption/spikes,
+    # all derived from the shared bench seed; validation ON for every
+    # request so the invariant checker rides the whole chaos run
+    plan = FaultPlan(seed=common.SEED, p_transient=0.05, p_evict=0.02,
+                     p_corrupt=0.01, p_spike=0.02, spike_s=0.05)
+    faults = FaultInjector(plan)
+    srv, rep, wall, retraces = _serve(ctx, programs, trace, max_batch,
+                                      serial=False, faults=faults,
+                                      validate=True)
+    goodput = rep.completed / rep.span_s if rep.span_s else 0.0
+    ratio = goodput / tput_clean if tput_clean else 0.0
+    unaccounted = rep.submitted - rep.accounted
+
+    # victim check: a failed request whose FINAL dispatch was a failing
+    # multi-request batch means quarantine bisect did not isolate it
+    last_rec = {}
+    for r in srv.records:
+        for rid in r.rids:
+            last_rec[rid] = r
+    victims = sorted(
+        rid for rid, o in srv.outcomes.items()
+        if o.startswith("failed:")
+        and not last_rec[rid].ok and last_rec[rid].n_real > 1)
+
+    chaos = {
+        "plan": {"seed": plan.seed, "p_transient": plan.p_transient,
+                 "p_evict": plan.p_evict, "p_corrupt": plan.p_corrupt,
+                 "p_spike": plan.p_spike, "spike_s": plan.spike_s},
+        "injected": dict(faults.injected),
+        "report": rep.to_dict(),
+        "wall_s": wall,
+        "goodput_ops": goodput,
+        "fault_free_ops": tput_clean,
+        "goodput_ratio": ratio,
+        "unaccounted": unaccounted,
+        "victims": victims,
+        "live_retraces": retraces,
+        "gate": {"min_goodput_ratio": GATE_CHAOS_GOODPUT,
+                 "passed": (unaccounted == 0 and not victims
+                            and ratio >= GATE_CHAOS_GOODPUT
+                            and retraces == 0)},
+    }
+    path = RESULTS / "BENCH_serving.json"
+    summary = json.loads(path.read_text()) if path.exists() else {}
+    summary["chaos"] = chaos
+    path.write_text(json.dumps(summary, indent=2))
+
+    lines = [
+        f"serving/chaos,{rep.span_s*1e6:.0f},"
+        f"goodput={goodput:.1f}ops;ratio={ratio:.2f};"
+        f"retries={rep.retries};failed={rep.failed};shed={rep.shed}",
+        f"serving/chaos_injected,{sum(faults.injected.values())},"
+        + ";".join(f"{k}={v}" for k, v in sorted(faults.injected.items())),
+    ]
+    if unaccounted != 0:
+        raise RuntimeError(
+            f"chaos accounting gate FAILED: {unaccounted} of "
+            f"{rep.submitted} requests lack a terminal outcome")
+    if victims:
+        raise RuntimeError(
+            f"chaos quarantine gate FAILED: co-batched victim failures "
+            f"for rids {victims} (bisect must isolate the poison)")
+    if retraces != 0:
+        raise RuntimeError(
+            f"chaos retrace gate FAILED: validation/chaos added "
+            f"{retraces} jit retraces (must be 0)")
+    if ratio < GATE_CHAOS_GOODPUT:
+        raise RuntimeError(
+            f"chaos goodput gate FAILED: {ratio:.2f}x < "
+            f"{GATE_CHAOS_GOODPUT}x of the fault-free run")
+    return lines
+
+
 def run() -> list[str]:
     from repro.core.ckks import CKKSContext
     from repro.serve import poisson_trace, replay_on_hardware
     from repro.sim import HE2_SM
+
+    if common.CHAOS:
+        return _run_chaos()
 
     RESULTS.mkdir(exist_ok=True)
     logn = 8 if common.SMOKE else 9

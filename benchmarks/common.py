@@ -33,6 +33,13 @@ SMOKE = False
 # Toggled by benchmarks.run.
 SEED = 0
 
+# --chaos: run the serving bench under its seeded fault-injection
+# schedule (serve.faults.FaultPlan derived from SEED) and gate on
+# recovery: zero unaccounted requests, no co-batched victim failures,
+# goodput >= 0.8x the fault-free run, zero added retraces.  Only the
+# serving module consumes it.  Toggled by benchmarks.run.
+CHAOS = False
+
 
 def smoke_subset(benches: list[str]) -> list[str]:
     return benches[:1] if SMOKE else benches

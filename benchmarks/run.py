@@ -4,12 +4,16 @@ Prints ``name,us_per_call,derived`` CSV lines and writes JSON results to
 benchmarks/results/ (consumed by EXPERIMENTS.md).
 
 Usage: python -m benchmarks.run [table4|fig14|...|all]
-                                [--smoke] [--seed N] [--list]
+                                [--smoke] [--seed N] [--chaos] [--list]
 
 --smoke restricts every module to its cheapest workload (CI fast path).
 --seed  sets the shared base seed (``benchmarks.common.SEED``) that the
         measured benches derive plaintexts, tenant keys, and arrival
         traces from; analytic figure modules are seed-free.
+--chaos runs the serving bench under its seeded fault-injection
+        schedule and gates on recovery (accounting, goodput, victims,
+        retraces); the chaos report lands under the ``"chaos"`` key of
+        BENCH_serving.json next to the fault-free run's numbers.
 --list  prints the available module names with a one-line description
         and exits.
 """
@@ -47,6 +51,7 @@ def main() -> None:
             print(f"{name:<12} {doc[0] if doc else ''}")
         return
     common.SMOKE = "--smoke" in argv
+    common.CHAOS = "--chaos" in argv
     args, it = [], iter(argv)
     for a in it:
         if a == "--seed":

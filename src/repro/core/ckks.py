@@ -21,6 +21,10 @@ from repro.core.keyswitch import (
     KeyswitchEngine, _to_mont_host_rows, ext_rows,
 )
 from repro.core.params import CKKSParams
+from repro.errors import (
+    CorruptCiphertextError, LevelExhaustedError,
+    ModulusChainMismatchError, ScaleDriftError,
+)
 
 
 @dataclasses.dataclass
@@ -142,9 +146,73 @@ class CKKSContext:
         m_coeff = poly.intt(m_eval, primes, self.pc)
         return self.encoder.decode(np.asarray(m_coeff), ct.scale, primes)
 
+    # ------------------------- guard checks ----------------------------
+    def _require_same_level(self, a: Ciphertext, b: Ciphertext,
+                            op: str) -> None:
+        if a.level != b.level:
+            raise ModulusChainMismatchError(
+                f"{op}: operand levels disagree",
+                hint="bring operands to a common level with level_down",
+                lhs_level=a.level, rhs_level=b.level)
+
+    def _require_pt_level(self, ct: Ciphertext, pt: Plaintext,
+                          op: str) -> None:
+        if pt.level < ct.level:
+            raise ModulusChainMismatchError(
+                f"{op}: plaintext encoded below the ciphertext level",
+                hint="re-encode the plaintext at level >= ct.level",
+                ct_level=ct.level, pt_level=pt.level)
+
+    def check_ciphertext(self, ct: Ciphertext, where: str = "") -> None:
+        """Ciphertext health guard: level sane, scale finite, limbs in
+        range.  Raises a typed ``CiphertextError`` on the first violated
+        invariant — the serving layer's opt-in per-request validator and
+        the runtime executor's block-boundary checker both call this.
+
+        The residue check runs as plain (eager) jnp reductions, so it
+        never touches the engine's jit plan caches: turning validation
+        on adds ZERO engine retraces (``engine.trace_counts`` is flat).
+        """
+        tag = f" at {where}" if where else ""
+        if not 0 <= ct.level <= self.params.L:
+            raise LevelExhaustedError(
+                f"ciphertext level out of range{tag}",
+                hint="bootstrap (or re-encrypt) before more rescales",
+                level=ct.level, L=self.params.L)
+        s = float(ct.scale)
+        if not np.isfinite(s) or s <= 0.0:
+            raise ScaleDriftError(
+                f"ciphertext scale is not a positive finite float{tag}",
+                hint="the producing op corrupted the scale trajectory",
+                scale=ct.scale, level=ct.level)
+        n = ct.level + 1
+        for name, comp in (("c0", ct.c0), ("c1", ct.c1)):
+            if comp.shape[-2] != n:
+                raise ModulusChainMismatchError(
+                    f"{name} carries {comp.shape[-2]} limbs but level "
+                    f"{ct.level} needs {n}{tag}",
+                    hint="ciphertext limbs and level drifted apart",
+                    limbs=comp.shape[-2], level=ct.level)
+        mods = self.pc.mods(self.chain(ct.level))[:, None]
+        for name, comp in (("c0", ct.c0), ("c1", ct.c1)):
+            if jnp.issubdtype(comp.dtype, jnp.floating):
+                if bool(jnp.any(jnp.isnan(comp))):
+                    raise CorruptCiphertextError(
+                        f"NaN limb in {name}{tag}",
+                        hint="a kernel produced NaN output",
+                        component=name, level=ct.level)
+                continue
+            bad = int(jnp.sum(comp >= mods))
+            if bad:
+                raise CorruptCiphertextError(
+                    f"{bad} residue(s) of {name} out of [0, q){tag}",
+                    hint="upstream data corruption — do not decrypt; "
+                         "re-encrypt and resubmit the request",
+                    component=name, level=ct.level, bad_residues=bad)
+
     # ------------------------- EWOs ------------------------------------
     def add(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
-        assert a.level == b.level, "level mismatch (use level_down)"
+        self._require_same_level(a, b, "add")
         mods = self.pc.mods(self.chain(a.level))
         return Ciphertext(
             poly.add(a.c0, b.c0, mods), poly.add(a.c1, b.c1, mods),
@@ -152,6 +220,7 @@ class CKKSContext:
         )
 
     def sub(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        self._require_same_level(a, b, "sub")
         mods = self.pc.mods(self.chain(a.level))
         return Ciphertext(
             poly.sub(a.c0, b.c0, mods), poly.sub(a.c1, b.c1, mods),
@@ -159,6 +228,7 @@ class CKKSContext:
         )
 
     def pt_add(self, a: Ciphertext, pt: Plaintext) -> Ciphertext:
+        self._require_pt_level(a, pt, "pt_add")
         mods = self.pc.mods(self.chain(a.level))
         return Ciphertext(
             poly.add(a.c0, pt.m[: a.n_limbs], mods), a.c1, a.level, a.scale
@@ -166,6 +236,7 @@ class CKKSContext:
 
     def pt_mul(self, a: Ciphertext, pt: Plaintext,
                rescale: bool = True) -> Ciphertext:
+        self._require_pt_level(a, pt, "pt_mul")
         mods = self.pc.mods(self.chain(a.level))
         out = Ciphertext(
             poly.mul(a.c0, pt.m[: a.n_limbs], mods),
@@ -177,13 +248,23 @@ class CKKSContext:
     # ------------------------- level management ------------------------
     def rescale(self, ct: Ciphertext) -> Ciphertext:
         lvl = ct.level
+        if lvl < 1:
+            raise LevelExhaustedError(
+                "rescale at level 0: the modulus chain is exhausted",
+                hint="bootstrap the ciphertext (or recompile the program "
+                     "with bootstrap insertion) before further mults",
+                level=lvl)
         q_last = self.chain(lvl)[-1]
         c0 = poly.rescale(ct.c0, lvl, self.pc)
         c1 = poly.rescale(ct.c1, lvl, self.pc)
         return Ciphertext(c0, c1, lvl - 1, ct.scale / q_last)
 
     def level_down(self, ct: Ciphertext, target: int) -> Ciphertext:
-        assert target <= ct.level
+        if not 0 <= target <= ct.level:
+            raise ModulusChainMismatchError(
+                "level_down target outside [0, ct.level]",
+                hint="level_down only drops limbs; it cannot raise",
+                target=target, level=ct.level)
         n = target + 1
         return Ciphertext(ct.c0[:n], ct.c1[:n], target, ct.scale)
 
@@ -200,7 +281,11 @@ class CKKSContext:
         from repro.core.keys import to_rns
 
         p = self.params
-        assert ct.level == 0
+        if ct.level != 0:
+            raise ModulusChainMismatchError(
+                "mod_raise expects a level-0 ciphertext",
+                hint="consume the remaining levels (or level_down) first",
+                level=ct.level)
         base = (p.q_primes[0],)
         full = p.q_chain(p.L)
         out = []
@@ -284,7 +369,7 @@ class CKKSContext:
         jit plan); the seed path keeps the per-digit loops.  Both are
         bit-exact and tally identical ``OpCounters``.
         """
-        assert a.level == b.level
+        self._require_same_level(a, b, "multiply")
         lvl = a.level
         mods = self.pc.mods(self.chain(lvl))
         d0, d1, d2 = tensor_product(a, b, mods)

@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.core import poly
 from repro.core.counters import OpCounters
+from repro.errors import ModulusChainMismatchError
 from repro.kernels.bconv.ops import bconv_kernel
 from repro.kernels.fused_ip.ops import fused_ip_mont
 from repro.kernels.modops import default_interpret, qinv_neg_host
@@ -247,10 +248,35 @@ class KeyswitchEngine:
         self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
 
     # ------------------------- evk stacking ----------------------------
+    def _admit_evk(self, evk: EvalKey) -> None:
+        """Cache-admission guard: an evk generated under different
+        ``CKKSParams`` (wrong digit count or extended-basis shape) must
+        be rejected HERE, at the cache boundary, not hoped past — a
+        mis-shaped key either crashes deep inside a jit trace or
+        silently keyswitches with garbage gadgets.  Runs only on cache
+        miss, so the hot path never pays for it."""
+        p = self.params
+        want_digits = p.dnum
+        want_shape = (2, p.L + 1 + p.k, p.N)
+        if len(evk.digits) != want_digits:
+            raise ModulusChainMismatchError(
+                "evk digit count disagrees with the engine's params",
+                hint="the key was generated under different CKKSParams; "
+                     "regenerate it with this context's KeyChain",
+                evk_digits=len(evk.digits), dnum=want_digits)
+        got = tuple(evk.digits[0].shape)
+        if got != want_shape:
+            raise ModulusChainMismatchError(
+                "evk digit shape disagrees with the extended basis",
+                hint="the key was generated under a different modulus "
+                     "chain; regenerate it with this context's KeyChain",
+                evk_shape=got, expected=want_shape)
+
     def _evk_stacked(self, evk: EvalKey) -> jnp.ndarray:
         """(dnum_full, 2, L+1+k, N) uint64, cached per key object."""
         key = id(evk)
         if key not in self._evk_full:
+            self._admit_evk(evk)
             self._evk_full[key] = (evk, jnp.stack(evk.digits))
         return self._evk_full[key][1]
 

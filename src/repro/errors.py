@@ -1,0 +1,132 @@
+"""Typed error taxonomy for the whole stack (core -> runtime -> serve).
+
+Before this module existed, the failure model of the repo was "an
+``assert`` fires or garbage comes out": a level-exhausted ciphertext, a
+key generated under different params, or a corrupted limb either killed
+the process with a bare ``AssertionError`` (which vanishes entirely
+under ``python -O``) or silently produced wrong results.  Neither is
+acceptable once the engine serves multi-tenant traffic — the serving
+layer must be able to *classify* a failure (is retrying useful? is the
+request itself poisoned? is the server overloaded?) and account for
+every request.
+
+Taxonomy (all rooted at :class:`ReproError`):
+
+``CiphertextError`` — the request's data is wrong; retrying the same
+request can never help (permanent):
+  * :class:`LevelExhaustedError`      — no modulus level left to consume
+  * :class:`ScaleDriftError`          — scale NaN/non-positive or off trace
+  * :class:`ModulusChainMismatchError`— level/limb/key chain disagreement
+  * :class:`CorruptCiphertextError`   — limb residues out of range / NaN
+
+``ServingError`` — the serving environment failed, not the data:
+  * :class:`KeyUnavailableError`      — tenant keys evicted (RETRYABLE:
+    per-tenant seeds are stable, a re-lease regenerates bit-identically)
+  * :class:`PlanCacheMissError`       — strict admission refused a cold
+    ``(plan signature, width)`` dispatch on the live path
+  * :class:`TransientEngineError`     — injected/observed transient
+    engine fault (RETRYABLE with backoff)
+  * :class:`RequestTimeout`           — virtual-clock deadline exceeded
+  * :class:`CircuitOpenError`         — per-tenant breaker is open
+  * :class:`InvalidRequestError`      — malformed request (unknown
+    program id, bad input tags)
+
+``ConfigError`` — invalid operator-supplied configuration (queue bound,
+batch width, registry capacity, ...).  These replaced bare ``assert``s
+on user-input paths: validation must survive ``python -O``.
+
+Every error carries a keyword ``context`` dict (tenant, level, rid, ...)
+and an optional ``hint`` with the remediation step; both are rendered
+into ``str(err)`` so an operator reading a log line knows what to do.
+:func:`is_retryable` is the single policy point the server's
+retry/backoff loop consults.
+"""
+from __future__ import annotations
+
+
+class ReproError(Exception):
+    """Root of the typed error taxonomy; carries context + a hint."""
+
+    def __init__(self, message: str, *, hint: str | None = None,
+                 **context):
+        self.message = message
+        self.hint = hint
+        self.context = context
+        super().__init__(self._render())
+
+    def _render(self) -> str:
+        parts = [self.message]
+        if self.context:
+            kv = ", ".join(f"{k}={v!r}" for k, v in
+                           sorted(self.context.items()))
+            parts.append(f"[{kv}]")
+        if self.hint:
+            parts.append(f"(hint: {self.hint})")
+        return " ".join(parts)
+
+
+# ------------------------- ciphertext data errors ----------------------
+class CiphertextError(ReproError):
+    """The ciphertext itself is unusable — retrying cannot help."""
+
+
+class LevelExhaustedError(CiphertextError):
+    """No modulus level left for the requested op (rescale at level 0)."""
+
+
+class ScaleDriftError(CiphertextError):
+    """Ciphertext scale is NaN/non-positive or drifted off the trace."""
+
+
+class ModulusChainMismatchError(CiphertextError):
+    """Operands/keys disagree about the active modulus chain."""
+
+
+class CorruptCiphertextError(CiphertextError):
+    """Limb residues out of [0, q) (or NaN) — data corruption."""
+
+
+# ------------------------- serving-environment errors ------------------
+class ServingError(ReproError):
+    """The serving environment failed; the request data may be fine."""
+
+
+class KeyUnavailableError(ServingError):
+    """Tenant key material is not resident (evicted mid-flight)."""
+
+
+class PlanCacheMissError(ServingError):
+    """Strict admission refused a cold (signature, width) dispatch."""
+
+
+class TransientEngineError(ServingError):
+    """Transient engine fault — retry with backoff is expected to work."""
+
+
+class RequestTimeout(ServingError):
+    """The request's virtual-clock deadline expired before completion."""
+
+
+class CircuitOpenError(ServingError):
+    """Per-tenant circuit breaker is open; request shed without work."""
+
+
+class InvalidRequestError(ServingError):
+    """Malformed request: unknown program id, missing input tags, ..."""
+
+
+# ------------------------- operator configuration ----------------------
+class ConfigError(ReproError):
+    """Invalid operator-supplied configuration value."""
+
+
+# ------------------------- retry policy --------------------------------
+# The single policy point for the server's retry loop: key eviction is
+# recoverable because per-tenant seeds are stable (a re-lease regenerates
+# the keys bit-identically); transient engine faults recover by design.
+RETRYABLE_ERRORS = (TransientEngineError, KeyUnavailableError)
+
+
+def is_retryable(err: BaseException) -> bool:
+    """Should the server retry the dispatch that raised ``err``?"""
+    return isinstance(err, RETRYABLE_ERRORS)

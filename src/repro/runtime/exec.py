@@ -42,9 +42,13 @@ from repro.core import poly
 from repro.core.ckks import CKKSContext, Ciphertext, Plaintext, \
     tensor_product
 from repro.dfg.graph import OpKind
+from repro.errors import (
+    InvalidRequestError, ModulusChainMismatchError, ScaleDriftError,
+)
 from repro.runtime.compile import CompiledProgram
 from repro.runtime.lower import (
-    EagerStep, HoistedStep, MultiHoistedStep, MultiRelinStep, RelinStep,
+    EagerStep, HoistedStep, KeyswitchFamilyStep, MultiHoistedStep,
+    MultiRelinStep, RelinStep,
 )
 
 
@@ -95,30 +99,50 @@ class ProgramExecutor:
     # ------------------------- public API ------------------------------
     def run(self, compiled: CompiledProgram,
             inputs: dict[str, Ciphertext],
-            with_report: bool = False) -> ExecResult:
+            with_report: bool = False,
+            validate: bool = False) -> ExecResult:
+        """``validate=True`` turns on the per-step invariant checker:
+        ciphertext health (level/scale/limb range) verified at every
+        keyswitch-block boundary and output.  Opt-in per request — the
+        checks run as eager jnp reductions OUTSIDE any jit trace, so
+        the engine's plan caches (and ``trace_counts``) are untouched,
+        but each check pays a device sync."""
         return self._run(compiled, inputs, batch=0,
-                         with_report=with_report)
+                         with_report=with_report, validate=validate)
 
     def run_batched(self, compiled: CompiledProgram,
                     inputs: dict[str, list[Ciphertext]],
-                    with_report: bool = False) -> ExecResult:
+                    with_report: bool = False,
+                    validate: bool = False) -> ExecResult:
         """Execute over B independent ciphertexts per input at once."""
         if not self.ctx.use_engine:
             raise NotImplementedError("batched execution needs the engine")
         batch = None
         stacked = {}
         for tag, cts in inputs.items():
-            assert len({(c.level, c.scale) for c in cts}) == 1, \
-                "batched inputs must share level and scale"
+            if len({(c.level, c.scale) for c in cts}) != 1:
+                raise ModulusChainMismatchError(
+                    f"batched inputs for '{tag}' mix levels/scales",
+                    hint="a batch must be homogeneous; split mixed-"
+                         "level requests into separate dispatches",
+                    tag=tag,
+                    levels=sorted({c.level for c in cts}),
+                    scales=sorted({c.scale for c in cts}))
             batch = len(cts) if batch is None else batch
-            assert len(cts) == batch, "all inputs must share batch size"
+            if len(cts) != batch:
+                raise InvalidRequestError(
+                    f"input '{tag}' has {len(cts)} ciphertexts but the "
+                    f"batch width is {batch}",
+                    hint="every input tag must carry one ciphertext "
+                         "per batch slot",
+                    tag=tag)
             stacked[tag] = Ciphertext(
                 jnp.stack([c.c0 for c in cts]),
                 jnp.stack([c.c1 for c in cts]),
                 cts[0].level, cts[0].scale,
             )
         res = self._run(compiled, stacked, batch=batch,
-                        with_report=with_report)
+                        with_report=with_report, validate=validate)
         outputs = {
             tag: [Ciphertext(ct.c0[b], ct.c1[b], ct.level, ct.scale)
                   for b in range(batch)]
@@ -128,9 +152,15 @@ class ProgramExecutor:
 
     # ------------------------- execution loop --------------------------
     def _run(self, compiled: CompiledProgram, inputs, batch: int,
-             with_report: bool) -> ExecResult:
+             with_report: bool, validate: bool = False) -> ExecResult:
         ctx = self.ctx
         self._pin(compiled)
+        missing = [t for t in compiled.inputs if t not in inputs]
+        if missing:
+            raise InvalidRequestError(
+                "request is missing program input tags",
+                hint="supply one ciphertext (list) per traced input",
+                missing=missing, expected=sorted(compiled.inputs))
         before = ctx.counters.snapshot()
         values: dict[int, Ciphertext] = {}
         digits: dict[int, object] = {}
@@ -146,7 +176,12 @@ class ProgramExecutor:
                 self._exec_multi_relin(compiled, step, values, batch)
             else:
                 self._exec_eager(compiled, step, values, outputs, inputs,
-                                 batch)
+                                 batch, validate)
+            if validate and isinstance(step, KeyswitchFamilyStep):
+                self._check_block(step, values[step.out])
+        if validate:
+            for tag, ct in outputs.items():
+                ctx.check_ciphertext(ct, where=f"output '{tag}'")
         report = None
         if with_report:
             from repro.runtime.report import build_report
@@ -319,25 +354,50 @@ class ProgramExecutor:
                 val, level=step.level, scale=step.pt_scale)
         return self._pt_cache[key]
 
+    # ------------------------- invariant checker -----------------------
+    def _check_block(self, step, ct: Ciphertext) -> None:
+        """Block-boundary invariants (opt-in): the ciphertext leaving a
+        keyswitch-family step is healthy and still on the traced level.
+        Raises typed ``CiphertextError``s; runs eagerly (no jit)."""
+        where = f"{type(step).__name__}(out={step.out})"
+        if ct.level != step.level:
+            raise ModulusChainMismatchError(
+                f"level drifted off the trace at {where}",
+                hint="the executed program diverged from its trace — "
+                     "recompile the program for this context",
+                level=ct.level, traced=step.level)
+        self.ctx.check_ciphertext(ct, where=where)
+
     # ------------------------- eager steps -----------------------------
     def _node_pt(self, compiled, node) -> Plaintext:
         return self._encode_spec(compiled, node.attrs["pt"])
 
     def _exec_eager(self, compiled, step: EagerStep, values, outputs,
-                    inputs, batch: int) -> None:
+                    inputs, batch: int, validate: bool = False) -> None:
         ctx = self.ctx
         node = compiled.dfg.nodes[step.nid]
         op = node.op
         a = values[node.args[0]] if node.args else None
         if op == OpKind.INPUT:
-            ct = inputs[node.attrs["tag"]]
-            assert ct.level == node.attrs["level"], \
-                f"input {node.attrs['tag']}: level {ct.level} != traced " \
-                f"{node.attrs['level']}"
+            tag = node.attrs["tag"]
+            ct = inputs[tag]
+            # user-input validation: typed (asserts vanish under -O)
+            if ct.level != node.attrs["level"]:
+                raise ModulusChainMismatchError(
+                    f"input '{tag}' level disagrees with the trace",
+                    hint="encrypt the input at the program's traced "
+                         "level (or recompile for this level)",
+                    tag=tag, level=ct.level,
+                    traced=node.attrs["level"])
             traced_scale = node.attrs["scale"]
-            assert abs(ct.scale / traced_scale - 1.0) < 1e-9, \
-                f"input {node.attrs['tag']}: scale {ct.scale} != traced " \
-                f"{traced_scale}"
+            if not abs(ct.scale / traced_scale - 1.0) < 1e-9:
+                raise ScaleDriftError(
+                    f"input '{tag}' scale disagrees with the trace",
+                    hint="encrypt the input at the program's traced "
+                         "scale",
+                    tag=tag, scale=ct.scale, traced=traced_scale)
+            if validate:
+                ctx.check_ciphertext(ct, where=f"input '{tag}'")
             values[step.nid] = ct
             return
         if op == OpKind.OUTPUT:

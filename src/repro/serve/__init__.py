@@ -24,16 +24,23 @@ the paper's hardware timelines.
             per tenant and aggregate (``ServingReport``);
   simfeed   (serve.simfeed)   — replay the batch log onto the
             ``sim.schedule`` group-pipeline timelines: what would the
-            HE^2 hardware do with this traffic.
+            HE^2 hardware do with this traffic;
+  faults    (serve.faults)    — deterministic seeded fault injection
+            (transient engine faults, mid-flight key evictions,
+            corrupted output limbs, latency spikes) driving the
+            server's retry / quarantine-bisect / breaker / shedding
+            recovery paths.
 
-See ``docs/SERVING.md`` for the operator's guide and
-``benchmarks/bench_serving.py`` for the gated end-to-end run.
+See ``docs/SERVING.md`` for the operator's guide (including the
+failure-handling section) and ``benchmarks/bench_serving.py`` for the
+gated end-to-end run (``--chaos`` for the fault-schedule gate).
 """
+from repro.serve.faults import FaultInjector, FaultPlan  # noqa: F401
 from repro.serve.metrics import ServingReport, percentile  # noqa: F401
 from repro.serve.queue import Request, RequestQueue  # noqa: F401
 from repro.serve.registry import TenantRegistry  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
-    ContinuousBatcher, PlanCache, plan_signature,
+    CircuitBreaker, ContinuousBatcher, PlanCache, plan_signature,
 )
 from repro.serve.server import BatchRecord, FHEServer  # noqa: F401
 from repro.serve.simfeed import replay_on_hardware  # noqa: F401

@@ -30,10 +30,20 @@ def percentile(values: list[float], p: float) -> float:
 
 @dataclasses.dataclass
 class TenantStats:
-    """Per-tenant accumulator: latencies in virtual seconds."""
+    """Per-tenant accumulator: latencies in virtual seconds.
+
+    Every submitted request reaches exactly ONE terminal counter:
+    ``completed`` (result delivered), ``failed`` (permanent typed error
+    after retries), ``shed`` (never executed: deadline expired, breaker
+    open, or overload), or ``rejected`` (bounded-queue backpressure at
+    submit).  The accounting identity the chaos gate checks is
+    ``completed + failed + shed + rejected == submitted``.
+    """
 
     completed: int = 0
     rejected: int = 0
+    failed: int = 0
+    shed: int = 0
     latencies: list[float] = dataclasses.field(default_factory=list)
 
     def record(self, latency_s: float) -> None:
@@ -44,6 +54,8 @@ class TenantStats:
         return {
             "completed": self.completed,
             "rejected": self.rejected,
+            "failed": self.failed,
+            "shed": self.shed,
             "throughput_ops": (self.completed / span_s) if span_s else 0.0,
             "p50_latency_s": percentile(self.latencies, 50),
             "p99_latency_s": percentile(self.latencies, 99),
@@ -65,6 +77,14 @@ class ServingReport:
     registry: dict                    # TenantRegistry.stats()
     queue: dict                       # depth stats + rejections
     tenants: dict[str, dict]          # tenant -> TenantStats.summary()
+    submitted: int = 0                # valid submit() calls observed
+    failed: int = 0                   # permanent typed failures
+    shed: int = 0                     # never executed (deadline/breaker/load)
+    retries: int = 0                  # re-dispatches after transient faults
+    quarantine_splits: int = 0        # bisect passes over failed batches
+    breaker_trips: int = 0            # circuit-breaker open transitions
+    shed_reasons: dict = dataclasses.field(default_factory=dict)
+    errors: dict = dataclasses.field(default_factory=dict)  # type -> count
     latencies_s: list[float] = dataclasses.field(default_factory=list,
                                                  repr=False)
 
@@ -80,11 +100,27 @@ class ServingReport:
     def p99_latency_s(self) -> float:
         return percentile(self.latencies_s, 99)
 
+    @property
+    def accounted(self) -> int:
+        """Requests with a terminal outcome — the chaos gate asserts
+        this equals the number submitted (nothing lost, nothing
+        double-counted)."""
+        return self.completed + self.rejected + self.failed + self.shed
+
     def to_dict(self) -> dict:
         return {
             "span_s": self.span_s,
+            "submitted": self.submitted,
             "completed": self.completed,
             "rejected": self.rejected,
+            "failed": self.failed,
+            "shed": self.shed,
+            "accounted": self.accounted,
+            "retries": self.retries,
+            "quarantine_splits": self.quarantine_splits,
+            "breaker_trips": self.breaker_trips,
+            "shed_reasons": self.shed_reasons,
+            "errors": self.errors,
             "batches": self.batches,
             "throughput_ops": self.throughput_ops,
             "p50_latency_s": self.p50_latency_s,

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.ckks import Ciphertext
+from repro.errors import ConfigError
 
 # A batch class: requests sharing (tenant, program) can vmap together —
 # same compiled plan AND same evk set (keys are per-tenant).
@@ -28,13 +29,22 @@ GroupKey = tuple[str, str]
 
 @dataclasses.dataclass
 class Request:
-    """One in-flight job: ``(tenant, program_id, ct inputs)``."""
+    """One in-flight job: ``(tenant, program_id, ct inputs)``.
+
+    ``deadline`` is an absolute virtual-clock time: past it the server
+    sheds the request (``RequestTimeout``) instead of executing it.
+    ``validate`` opts this request into the executor's per-step
+    invariant checker (ciphertext health guards); a batch validates if
+    ANY member requests it.
+    """
 
     rid: int
     tenant: str
     program_id: str
     inputs: dict[str, Ciphertext]
     arrival: float                  # virtual-clock submission time (s)
+    deadline: float | None = None   # absolute virtual-clock cutoff (s)
+    validate: bool = False          # opt-in invariant checking
 
     @property
     def group(self) -> GroupKey:
@@ -45,7 +55,10 @@ class RequestQueue:
     """Bounded FIFO of :class:`Request` with group (batch-class) views."""
 
     def __init__(self, maxsize: int = 256):
-        assert maxsize > 0
+        if maxsize <= 0:
+            raise ConfigError("queue maxsize must be positive",
+                              hint="pick a bound; backpressure needs one",
+                              maxsize=maxsize)
         self.maxsize = maxsize
         self._items: list[Request] = []
         self._next_rid = 0
@@ -61,12 +74,14 @@ class RequestQueue:
 
     def offer(self, tenant: str, program_id: str,
               inputs: dict[str, Ciphertext], arrival: float,
-              ) -> Request | None:
+              deadline: float | None = None,
+              validate: bool = False) -> Request | None:
         """Admit a request, or return None (backpressure) when full."""
         if len(self._items) >= self.maxsize:
             self.rejected += 1
             return None
-        req = Request(self._next_rid, tenant, program_id, inputs, arrival)
+        req = Request(self._next_rid, tenant, program_id, inputs, arrival,
+                      deadline=deadline, validate=validate)
         self._next_rid += 1
         self._items.append(req)
         self.depth_samples.append(len(self._items))

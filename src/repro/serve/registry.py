@@ -29,6 +29,11 @@ import contextlib
 
 from repro.core.ckks import CKKSContext
 from repro.core.keys import KeyChain
+from repro.errors import ConfigError, KeyUnavailableError
+
+_EVICT_HINT = ("tenant keys were LRU-evicted; re-enroll the tenant "
+               "(lease/warmup regenerates them bit-identically from its "
+               "stable seed) or raise the registry capacity")
 
 
 class TenantRegistry:
@@ -36,7 +41,10 @@ class TenantRegistry:
 
     def __init__(self, ctx: CKKSContext, capacity: int = 8,
                  base_seed: int = 1000):
-        assert capacity > 0
+        if capacity <= 0:
+            raise ConfigError("registry capacity must be positive",
+                              hint="at least one tenant must fit",
+                              capacity=capacity)
         self.ctx = ctx
         self.capacity = capacity
         self.base_seed = base_seed
@@ -61,13 +69,25 @@ class TenantRegistry:
             self._seeds[tenant] = self.base_seed + len(self._seeds)
         return self._seeds[tenant]
 
-    def keychain(self, tenant: str) -> KeyChain:
-        """The tenant's keys, creating (and possibly evicting) on miss."""
+    def keychain(self, tenant: str, create: bool = True) -> KeyChain:
+        """The tenant's keys, creating (and possibly evicting) on miss.
+
+        ``create=False`` is the strict lookup: a request that references
+        a tenant whose keys were evicted gets a typed
+        :class:`KeyUnavailableError` carrying the tenant id and the
+        remediation (NOT a bare ``KeyError``) — the server's retry path
+        treats it as recoverable because re-keygen is deterministic.
+        """
         if tenant in self._chains:
             self.hits += 1
             self._chains[tenant] = self._chains.pop(tenant)  # LRU bump
             return self._chains[tenant]
         self.misses += 1
+        if not create:
+            raise KeyUnavailableError(
+                f"tenant '{tenant}' has no resident key material",
+                hint=_EVICT_HINT, tenant=tenant,
+                resident=len(self._chains), capacity=self.capacity)
         while len(self._chains) >= self.capacity:
             if not self._evict_one():
                 break        # every resident tenant is in flight
@@ -81,11 +101,26 @@ class TenantRegistry:
         tensors from the engine caches.  False if none is evictable."""
         for tenant in self._chains:        # insertion order == LRU order
             if self._inflight.get(tenant, 0) == 0:
-                kc = self._chains.pop(tenant)
-                self._purge_engine_caches(kc)
-                self.evictions += 1
+                self.evict(tenant)
                 return True
         return False
+
+    def evict(self, tenant: str, force: bool = False) -> bool:
+        """Evict one tenant's keys and purge its engine evk tensors.
+
+        ``force=True`` evicts even an in-flight tenant — that is the
+        fault the injection harness uses to exercise the server's
+        ``KeyUnavailableError`` recovery; normal LRU eviction never
+        does this (an active lease pins the keys).
+        """
+        if tenant not in self._chains:
+            return False
+        if not force and self._inflight.get(tenant, 0) > 0:
+            return False
+        kc = self._chains.pop(tenant)
+        self._purge_engine_caches(kc)
+        self.evictions += 1
+        return True
 
     def _purge_engine_caches(self, kc: KeyChain) -> None:
         engine = self.ctx.engine
@@ -102,10 +137,12 @@ class TenantRegistry:
 
     # ------------------------- leases ----------------------------------
     @contextlib.contextmanager
-    def lease(self, tenant: str):
+    def lease(self, tenant: str, create: bool = True):
         """Install the tenant's keys on the shared context and pin them
-        against eviction while the lease is held (re-entrant)."""
-        kc = self.keychain(tenant)
+        against eviction while the lease is held (re-entrant).
+        ``create=False`` raises :class:`KeyUnavailableError` instead of
+        re-keygen when the tenant was evicted."""
+        kc = self.keychain(tenant, create=create)
         prev = self.ctx.keys
         self.ctx.keys = kc
         self._inflight[tenant] = self._inflight.get(tenant, 0) + 1

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.errors import ConfigError, PlanCacheMissError
 from repro.runtime.compile import CompiledProgram
 from repro.runtime.lower import KeyswitchFamilyStep
 from repro.serve.queue import GroupKey, Request, RequestQueue
@@ -85,6 +86,19 @@ class PlanCache:
     def is_warm(self, signature: tuple, batch: int) -> bool:
         return (signature, batch) in self._warm
 
+    def require(self, signature: tuple, batch: int) -> None:
+        """Strict admission: raise :class:`PlanCacheMissError` when a
+        live dispatch would have to pay a jit trace.  Servers running
+        with ``strict_plans=True`` call this before executing, so a
+        cold shape becomes an accounted request failure instead of a
+        silent multi-second trace stall inside the batch."""
+        if not self.is_warm(signature, batch):
+            raise PlanCacheMissError(
+                "dispatch shape was never warmed",
+                hint="warm this (program, width) via FHEServer.warmup "
+                     "before serving, or run with strict_plans=False",
+                batch=batch, warm_widths=self.warm_widths(signature))
+
     def warm_widths(self, signature: tuple) -> list[int]:
         """Batch sizes this signature has been traced at, ascending —
         the server pads a partial batch up to the SMALLEST warm width
@@ -121,7 +135,9 @@ class ContinuousBatcher:
     """Max-batch / max-wait continuous batching over the request queue."""
 
     def __init__(self, max_batch: int = 4, max_wait_s: float = 0.05):
-        assert max_batch > 0
+        if max_batch <= 0:
+            raise ConfigError("max_batch must be positive",
+                              max_batch=max_batch)
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
 
@@ -152,3 +168,73 @@ class ContinuousBatcher:
         (possibly partial) batch — the clock's idle-advance target."""
         head = queue.oldest()
         return None if head is None else head.arrival + self.max_wait_s
+
+
+class CircuitBreaker:
+    """Per-tenant failure isolation on the virtual clock.
+
+    One tenant repeatedly submitting poisoned requests (corrupt inputs,
+    wrong-level ciphertexts) must not keep burning engine time and
+    bisect passes for everyone else.  Classic three-state breaker:
+
+    * **closed** — normal service; consecutive request failures are
+      counted, any success resets the count;
+    * **open** — tripped after ``threshold`` consecutive failures: the
+      tenant's requests are shed (``CircuitOpenError`` reason) without
+      touching the engine, until ``cooldown_s`` virtual seconds pass;
+    * **half-open** — after the cooldown, exactly one probe batch is
+      allowed through: success closes the breaker, failure re-opens it
+      (a fresh trip, a fresh cooldown).
+
+    All timing is virtual-clock, so chaos schedules replay exactly.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 0.5):
+        if threshold <= 0:
+            raise ConfigError("breaker threshold must be positive",
+                              threshold=threshold)
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self._fails: dict[str, int] = {}       # consecutive failures
+        self._open_until: dict[str, float] = {}
+        self._probing: set[str] = set()        # half-open probe issued
+        self.trips = 0
+
+    def allow(self, tenant: str, now: float) -> bool:
+        """May this tenant's batch dispatch at virtual time ``now``?"""
+        until = self._open_until.get(tenant)
+        if until is None:
+            return True
+        if now < until:
+            return False
+        # cooldown elapsed: half-open — let one probe batch through
+        if tenant in self._probing:
+            return False
+        self._probing.add(tenant)
+        return True
+
+    def record_success(self, tenant: str) -> None:
+        self._fails.pop(tenant, None)
+        self._open_until.pop(tenant, None)
+        self._probing.discard(tenant)
+
+    def record_failure(self, tenant: str, now: float) -> None:
+        if tenant in self._probing:            # failed half-open probe
+            self._probing.discard(tenant)
+            self._open_until[tenant] = now + self.cooldown_s
+            self.trips += 1
+            return
+        n = self._fails.get(tenant, 0) + 1
+        self._fails[tenant] = n
+        if n >= self.threshold and tenant not in self._open_until:
+            self._open_until[tenant] = now + self.cooldown_s
+            self._fails[tenant] = 0
+            self.trips += 1
+
+    def is_open(self, tenant: str, now: float) -> bool:
+        until = self._open_until.get(tenant)
+        return until is not None and now < until
+
+    def stats(self) -> dict:
+        return {"trips": self.trips,
+                "open_tenants": sorted(self._open_until)}

@@ -21,6 +21,26 @@ engine time land in the same unit while the arrival process stays
 deterministic and replayable (same ``--seed``, same trace, both
 baselines, and the simulator half all see identical traffic).
 
+Failure model: every submitted request reaches exactly one terminal
+outcome — ``completed``, ``failed`` (permanent typed error), ``shed``
+(never executed: deadline expired, breaker open, overload), or
+``rejected`` (bounded-queue backpressure).  The recovery machinery:
+
+* **retry with capped exponential backoff** for retryable errors
+  (:data:`repro.errors.RETRYABLE_ERRORS` — transient engine faults,
+  evicted keys that deterministic re-keygen restores).  Backoff time is
+  virtual-clock time, so chaos runs replay exactly.
+* **quarantine bisect** for permanent ciphertext errors in a multi-
+  request batch: the batch splits in half and each half re-dispatches,
+  recursively, until the poisoned request(s) fail alone — co-batched
+  victims complete instead of failing collaterally.
+* **per-tenant circuit breaker** (:class:`~repro.serve.scheduler.
+  CircuitBreaker`): a tenant failing repeatedly is shed without
+  touching the engine until a cooldown elapses.
+* **overload shedding** at submit: when the EWMA service-time estimate
+  says the queue wait already blows the request's deadline headroom,
+  the request is shed with reason ``overload`` instead of queued.
+
 The serial baseline (:meth:`FHEServer.run_serial`) answers the gate
 question: same trace, same virtual clock, but every request executes
 alone (batch slots = 1) in strict arrival order — what a
@@ -32,12 +52,16 @@ import dataclasses
 import time
 
 from repro.core.ckks import CKKSContext, Ciphertext
+from repro.errors import (
+    CiphertextError, InvalidRequestError, ReproError, is_retryable,
+)
 from repro.runtime import CompiledProgram, ProgramExecutor
 from repro.serve.metrics import ServingReport, TenantStats
-from repro.serve.queue import RequestQueue
+from repro.serve.queue import Request, RequestQueue
 from repro.serve.registry import TenantRegistry
 from repro.serve.scheduler import (
-    ContinuousBatcher, PackedBatch, PlanCache, plan_signature,
+    CircuitBreaker, ContinuousBatcher, PackedBatch, PlanCache,
+    plan_signature,
 )
 from repro.serve.workload import Arrival
 
@@ -54,6 +78,9 @@ class BatchRecord:
     batch: int                    # padded dispatch width
     plan_hit: bool                # admission policy verdict
     rids: list[int]
+    ok: bool = True               # dispatch finished without error
+    error: str | None = None      # typed error class name when not ok
+    attempt: int = 0              # 0 = first try, >0 = retry number
 
 
 class FHEServer:
@@ -62,7 +89,14 @@ class FHEServer:
     def __init__(self, ctx: CKKSContext, max_batch: int = 4,
                  max_wait_s: float = 0.05, queue_size: int = 256,
                  registry: TenantRegistry | None = None,
-                 keep_outputs: bool = True):
+                 keep_outputs: bool = True,
+                 default_deadline_s: float | None = None,
+                 max_retries: int = 2,
+                 backoff_base_s: float = 0.01,
+                 backoff_cap_s: float = 0.25,
+                 breaker: CircuitBreaker | None = None,
+                 strict_plans: bool = False,
+                 faults=None):
         if not ctx.use_engine:
             raise NotImplementedError(
                 "serving requires the batched engine (use_engine=True)")
@@ -79,6 +113,22 @@ class FHEServer:
         self.keep_outputs = keep_outputs
         self.outputs: dict[int, dict[str, Ciphertext]] = {}
         self._tenants: dict[str, TenantStats] = {}
+        # ---- fault tolerance -------------------------------------------
+        self.default_deadline_s = default_deadline_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.breaker = breaker
+        self.strict_plans = strict_plans
+        self.faults = faults            # FaultInjector | None (duck-typed)
+        self.submitted = 0
+        self.retries = 0
+        self.quarantine_splits = 0
+        self.shed_reasons: dict[str, int] = {}
+        self.errors: dict[str, int] = {}
+        self.outcomes: dict[int, str] = {}   # rid -> terminal outcome
+        self._dispatch_idx = 0               # fault-plan index
+        self._ewma_service_s: float | None = None
 
     # ------------------------- programs --------------------------------
     def register_program(self, program_id: str,
@@ -110,70 +160,232 @@ class FHEServer:
         return self._tenants[tenant]
 
     def submit(self, tenant: str, program_id: str,
-               inputs: dict[str, Ciphertext], arrival: float) -> bool:
-        """Queue one request; False = rejected (bounded-queue
-        backpressure, tallied per tenant)."""
-        assert program_id in self.programs, f"unknown {program_id}"
-        req = self.queue.offer(tenant, program_id, inputs, arrival)
+               inputs: dict[str, Ciphertext], arrival: float,
+               deadline: float | None = None,
+               validate: bool = False) -> bool:
+        """Queue one request; False = not admitted (backpressure
+        rejection or overload shed, tallied per tenant).
+
+        Malformed requests raise :class:`InvalidRequestError` — a
+        client error is a typed refusal, not an assert that vanishes
+        under ``python -O`` or a crash inside a shared batch later.
+        """
+        if program_id not in self.programs:
+            raise InvalidRequestError(
+                "unknown program id",
+                hint="register_program() the compiled program first",
+                program_id=program_id, known=sorted(self.programs))
+        compiled = self.programs[program_id]
+        missing = [t for t in compiled.inputs if t not in inputs]
+        if missing:
+            raise InvalidRequestError(
+                "request is missing input ciphertexts",
+                program_id=program_id, missing=missing)
+        self.submitted += 1
+        if deadline is None and self.default_deadline_s is not None:
+            deadline = arrival + self.default_deadline_s
+        # Overload shed: if the queue wait we can already predict blows
+        # the deadline headroom, refuse now instead of executing a
+        # result nobody will accept.
+        if deadline is not None and self._ewma_service_s is not None:
+            est_wait = ((self.queue.depth / self.batcher.max_batch + 1.0)
+                        * self._ewma_service_s)
+            if arrival + est_wait > deadline:
+                self._shed_unqueued(tenant, "overload")
+                return False
+        req = self.queue.offer(tenant, program_id, inputs, arrival,
+                               deadline=deadline, validate=validate)
         if req is None:
             self._stats(tenant).rejected += 1
             return False
         return True
 
+    # ------------------------- outcomes --------------------------------
+    def _shed_unqueued(self, tenant: str, reason: str) -> None:
+        self._stats(tenant).shed += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+
+    def _shed(self, reqs: list[Request], reason: str) -> None:
+        self.shed_reasons[reason] = (self.shed_reasons.get(reason, 0)
+                                     + len(reqs))
+        for r in reqs:
+            self._stats(r.tenant).shed += 1
+            self.outcomes[r.rid] = f"shed:{reason}"
+
+    def _fail(self, reqs: list[Request], err: ReproError,
+              now: float) -> None:
+        name = type(err).__name__
+        self.errors[name] = self.errors.get(name, 0) + len(reqs)
+        for r in reqs:
+            self._stats(r.tenant).failed += 1
+            self.outcomes[r.rid] = f"failed:{name}"
+        if self.breaker is not None and reqs:
+            self.breaker.record_failure(reqs[0].tenant, now)
+
     # ------------------------- execution -------------------------------
-    def _execute(self, batch: PackedBatch, now: float,
-                 width: int | None = None) -> float:
-        """Dispatch one packed batch padded to ``width`` slots.
+    def _dispatch_once(self, reqs: list[Request], tenant: str,
+                       program_id: str, now: float, width: int | None,
+                       attempt: int):
+        """One engine dispatch, padded to ``width`` slots.
 
         ``width=None`` picks the smallest already-warm bucket that fits
         the real requests (falling back to max_batch), so a partial
         batch only pays for the nearest warmed shape, never a retrace.
+        Returns ``(dt, error, outputs)`` — errors are *returned*, not
+        raised, because the failed attempt's measured duration must
+        still advance the virtual clock.
         """
-        compiled = self.programs[batch.program_id]
-        sig = self._signatures[batch.program_id]
+        compiled = self.programs[program_id]
+        sig = self._signatures[program_id]
         if width is None:
             fits = [w for w in self.plan_cache.warm_widths(sig)
-                    if w >= len(batch.requests)]
+                    if w >= len(reqs)]
             B = min(fits) if fits else self.batcher.max_batch
         else:
             B = width
-        hit = self.plan_cache.admit(sig, B)
-        reqs = batch.requests
-        pad = B - len(reqs)
-        stacked = {
-            tag: ([r.inputs[tag] for r in reqs]
-                  + [reqs[-1].inputs[tag]] * pad)
-            for tag in compiled.inputs
-        }
-        with self.registry.lease(batch.tenant):
-            t0 = time.perf_counter()
-            res = self.executor.run_batched(compiled, stacked)
-            for cts in res.outputs.values():
-                cts[0].c0.block_until_ready()
-            dt = time.perf_counter() - t0
-        if self.keep_outputs:
-            for j, r in enumerate(reqs):
-                self.outputs[r.rid] = {tag: cts[j] for tag, cts
-                                       in res.outputs.items()}
+        validate = any(r.validate for r in reqs)
+        idx = self._dispatch_idx
+        self._dispatch_idx += 1
+        err, res, hit = None, None, False
+        t0 = time.perf_counter()
+        try:
+            if self.strict_plans:
+                self.plan_cache.require(sig, B)
+            hit = self.plan_cache.admit(sig, B)
+            if self.faults is not None:
+                self.faults.before_dispatch(idx, self, tenant)
+            pad = B - len(reqs)
+            stacked = {
+                tag: ([r.inputs[tag] for r in reqs]
+                      + [reqs[-1].inputs[tag]] * pad)
+                for tag in compiled.inputs
+            }
+            with self.registry.lease(tenant):
+                res = self.executor.run_batched(compiled, stacked,
+                                                validate=validate)
+                for cts in res.outputs.values():
+                    cts[0].c0.block_until_ready()
+        except ReproError as e:
+            err = e
+        dt = time.perf_counter() - t0
+        if self.faults is not None:
+            dt += self.faults.extra_latency(idx)
+            if err is None and res is not None:
+                self.faults.corrupt_outputs(idx, res.outputs,
+                                            n_real=len(reqs))
+        if err is None:
+            e = self._ewma_service_s
+            self._ewma_service_s = dt if e is None else 0.8 * e + 0.2 * dt
         self.records.append(BatchRecord(
-            start_s=now, duration_s=dt, tenant=batch.tenant,
-            program_id=batch.program_id, n_real=len(reqs), batch=B,
+            start_s=now, duration_s=dt, tenant=tenant,
+            program_id=program_id, n_real=len(reqs), batch=B,
             plan_hit=hit, rids=[r.rid for r in reqs],
+            ok=err is None,
+            error=type(err).__name__ if err is not None else None,
+            attempt=attempt,
         ))
-        return dt
+        return dt, err, (res.outputs if res is not None else None)
 
-    def _complete(self, batch: PackedBatch, now: float) -> None:
-        for r in batch.requests:
+    def _deliver(self, reqs: list[Request], outputs, now: float,
+                 tenant: str) -> None:
+        """Terminal accounting for a successful dispatch: per-slot
+        output health checks (a corrupted slot fails ONLY its own
+        request — zero silently-wrong results), then completion."""
+        ok: list[Request] = []
+        check = self.faults is not None
+        for j, r in enumerate(reqs):
+            outs = {tag: cts[j] for tag, cts in outputs.items()}
+            slot_err = None
+            if r.validate or check:
+                try:
+                    for tag, ct in outs.items():
+                        self.ctx.check_ciphertext(
+                            ct, where=f"output[{tag}] rid={r.rid}")
+                except CiphertextError as e:
+                    slot_err = e
+            if slot_err is not None:
+                self._fail([r], slot_err, now)
+                continue
+            if self.keep_outputs:
+                self.outputs[r.rid] = outs
+            ok.append(r)
+        for r in ok:
             self._stats(r.tenant).record(now - r.arrival)
+            self.outcomes[r.rid] = "completed"
+        if ok and self.breaker is not None:
+            self.breaker.record_success(tenant)
+
+    def _serve_requests(self, reqs: list[Request], tenant: str,
+                        program_id: str, now: float,
+                        width: int | None) -> float:
+        """Dispatch + recover: retry/backoff on transient errors,
+        quarantine bisect on permanent ciphertext errors.  Returns the
+        advanced virtual clock; every request in ``reqs`` reaches a
+        terminal outcome before this returns."""
+        attempt = 0
+        while True:
+            dt, err, outputs = self._dispatch_once(
+                reqs, tenant, program_id, now, width, attempt)
+            now += dt
+            if err is None:
+                self._deliver(reqs, outputs, now, tenant)
+                return now
+            if is_retryable(err) and attempt < self.max_retries:
+                backoff = min(self.backoff_cap_s,
+                              self.backoff_base_s * (2 ** attempt))
+                now += backoff
+                self.retries += 1
+                attempt += 1
+                continue
+            # Permanent error (or retries exhausted).  A poisoned
+            # ciphertext in a shared batch must not fail its co-batched
+            # victims: bisect and re-dispatch each half until the
+            # poison fails alone.
+            if isinstance(err, (CiphertextError, InvalidRequestError)) \
+                    and len(reqs) > 1:
+                self.quarantine_splits += 1
+                mid = len(reqs) // 2
+                now = self._serve_requests(reqs[:mid], tenant,
+                                           program_id, now, width)
+                now = self._serve_requests(reqs[mid:], tenant,
+                                           program_id, now, width)
+                return now
+            self._fail(reqs, err, now)
+            return now
+
+    def _serve_batch(self, batch: PackedBatch, now: float,
+                     width: int | None = None) -> float:
+        """Serve one packed batch through the full degradation ladder:
+        breaker gate -> deadline shed -> dispatch with recovery."""
+        if self.breaker is not None \
+                and not self.breaker.allow(batch.tenant, now):
+            self._shed(batch.requests, "breaker_open")
+            return now
+        live: list[Request] = []
+        expired: list[Request] = []
+        for r in batch.requests:
+            (expired if r.deadline is not None and now > r.deadline
+             else live).append(r)
+        if expired:
+            self._shed(expired, "deadline")
+        if not live:
+            return now
+        return self._serve_requests(live, batch.tenant,
+                                    batch.program_id, now, width)
 
     # ------------------------- serving loops ---------------------------
-    def run_trace(self, trace: list[Arrival], inputs_for) -> ServingReport:
+    def run_trace(self, trace: list[Arrival], inputs_for,
+                  deadline_s: float | None = None,
+                  validate: bool = False) -> ServingReport:
         """Serve an open-loop arrival trace to completion.
 
         ``inputs_for(arrival) -> {tag: Ciphertext}`` materializes each
         request's ciphertexts; it runs under the tenant's key lease (so
         ``ctx.encrypt`` uses the right secret) and OFF the virtual
         clock — encryption is client-side work, not server time.
+        ``deadline_s`` gives every request a relative deadline
+        (overriding ``default_deadline_s``); ``validate`` opts every
+        request into the executor's invariant checker.
         """
         arr = sorted(trace, key=lambda a: a.t)
         i, now = 0, 0.0
@@ -182,7 +394,9 @@ class FHEServer:
                 a = arr[i]
                 with self.registry.lease(a.tenant):
                     inputs = inputs_for(a)
-                self.submit(a.tenant, a.program_id, inputs, a.t)
+                dl = a.t + deadline_s if deadline_s is not None else None
+                self.submit(a.tenant, a.program_id, inputs, a.t,
+                            deadline=dl, validate=validate)
                 i += 1
             drain = i >= len(arr)
             batch = self.batcher.pick(self.queue, now, drain=drain)
@@ -195,11 +409,12 @@ class FHEServer:
                     targets.append(flush)
                 now = max(now, min(targets))
                 continue
-            now += self._execute(batch, now)
-            self._complete(batch, now)
+            now = self._serve_batch(batch, now)
         return self.report(span_s=now)
 
-    def run_serial(self, trace: list[Arrival], inputs_for) -> ServingReport:
+    def run_serial(self, trace: list[Arrival], inputs_for,
+                   deadline_s: float | None = None,
+                   validate: bool = False) -> ServingReport:
         """Baseline: the same trace, one request at a time (no packing),
         strict arrival order, on the same virtual clock."""
         arr = sorted(trace, key=lambda a: a.t)
@@ -207,15 +422,15 @@ class FHEServer:
         for a in arr:
             with self.registry.lease(a.tenant):
                 inputs = inputs_for(a)
-            req = self.queue.offer(a.tenant, a.program_id, inputs, a.t)
-            if req is None:
-                self._stats(a.tenant).rejected += 1
+            dl = a.t + deadline_s if deadline_s is not None else None
+            if not self.submit(a.tenant, a.program_id, inputs, a.t,
+                               deadline=dl, validate=validate):
                 continue
+            req = self.queue.oldest()
+            self.queue.take([req])
             now = max(now, a.t)
             batch = PackedBatch((a.tenant, a.program_id), [req])
-            self.queue.take([req])
-            now += self._execute(batch, now, width=1)
-            self._complete(batch, now)
+            now = self._serve_batch(batch, now, width=1)
         return self.report(span_s=now)
 
     # ------------------------- reporting -------------------------------
@@ -241,5 +456,14 @@ class FHEServer:
             },
             tenants={t: s.summary(span_s)
                      for t, s in sorted(self._tenants.items())},
+            submitted=self.submitted,
+            failed=sum(s.failed for s in self._tenants.values()),
+            shed=sum(s.shed for s in self._tenants.values()),
+            retries=self.retries,
+            quarantine_splits=self.quarantine_splits,
+            breaker_trips=(self.breaker.trips
+                           if self.breaker is not None else 0),
+            shed_reasons=dict(self.shed_reasons),
+            errors=dict(self.errors),
             latencies_s=lat_all,
         )

@@ -45,13 +45,18 @@ def replay_on_hardware(records, programs: dict[str, CompiledProgram],
     ordered = sorted(records, key=lambda r: r.start_s)
     packed = []
     n_requests = 0
-    for rec in ordered:
+    wasted = 0          # dispatches that errored (chaos runs): the
+    for rec in ordered:  # hardware still burned their blocks' time, but
+        # the requests only count toward goodput on their ok dispatch
         # scale by the requests actually served, not the padded jit
         # width: hardware packs per ciphertext and has no retrace-shape
         # constraint, so padding is an engine artifact the model skips
         packed.extend(program_blocks(programs[rec.program_id],
                                      rec.n_real))
-        n_requests += rec.n_real
+        if getattr(rec, "ok", True):
+            n_requests += rec.n_real
+        else:
+            wasted += 1
     pipe = simulate_blocks(packed, hw, name="serving", mode="pipelined")
 
     # hardware analogue of the serial loop: every real request alone,
@@ -66,6 +71,7 @@ def replay_on_hardware(records, programs: dict[str, CompiledProgram],
         "hw": hw.name,
         "batches": len(ordered),
         "requests": n_requests,
+        "wasted_dispatches": wasted,
         "pipelined_s": pipe.latency_s,
         "serial_s": serial_s,
         "speedup": (serial_s / pipe.latency_s) if pipe.latency_s else 0.0,

@@ -1,0 +1,394 @@
+"""Fault-tolerance invariants: taxonomy, health guards, chaos recovery.
+
+Covers the acceptance gates of the fault-tolerant serving layer:
+  * typed error taxonomy (hierarchy, context/hint rendering, the
+    retryable classification the server's backoff loop consults)
+  * ciphertext health guards catch corruption, scale drift, level
+    exhaustion and chain mismatches as typed errors
+  * registry eviction surfaces ``KeyUnavailableError`` (tenant id +
+    remediation), never a raw ``KeyError``
+  * deterministic chaos schedules: transient faults retry to success,
+    mid-flight key evictions recover via deterministic re-keygen (and
+    still decrypt correctly), zero silently-wrong results
+  * quarantine bisect isolates exactly the poisoned request — zero
+    co-batched victims
+  * the per-tenant circuit breaker trips, sheds, and recovers
+  * deadline-expired requests are shed, not executed
+  * every request is terminally accounted:
+    completed + failed + shed + rejected == submitted
+  * invariant-guard mode adds ZERO engine retraces
+"""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import linear
+from repro.core.ckks import CKKSContext, Ciphertext
+from repro.core.params import CKKSParams
+from repro.errors import (
+    CiphertextError, ConfigError, CorruptCiphertextError,
+    InvalidRequestError, KeyUnavailableError, LevelExhaustedError,
+    ModulusChainMismatchError, PlanCacheMissError, ReproError,
+    ScaleDriftError, ServingError, TransientEngineError, is_retryable,
+)
+from repro.serve import (
+    Arrival, CircuitBreaker, FaultInjector, FaultPlan, FHEServer,
+    PlanCache, TenantRegistry,
+)
+from repro.serve.faults import _corrupt_limb
+
+N_DIAG, BS = 4, 2
+
+
+@pytest.fixture(scope="module")
+def sctx():
+    params = CKKSParams(logN=8, L=4, alpha=2, k=2, q_bits=29,
+                        scale_bits=29)
+    return CKKSContext(params, seed=3)
+
+
+@pytest.fixture(scope="module")
+def sprog(sctx):
+    from repro.runtime import TraceContext, compile_program
+
+    params = sctx.params
+    rng = np.random.default_rng(11)
+    diags = {d: rng.normal(size=params.num_slots) for d in range(N_DIAG)}
+    tc = TraceContext(params)
+    h = tc.input("x", level=params.L, scale=params.scale)
+    tc.output(linear.matvec_bsgs(tc, h, diags, bs=BS), "y")
+    return compile_program(tc), diags
+
+
+def _server(sctx, sprog, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_wait_s", 0.0)
+    server = FHEServer(sctx, **kw)
+    server.register_program("a", sprog[0])
+    return server
+
+
+def _warm(server, sctx, widths):
+    with server.registry.lease("warm"):
+        ct0 = sctx.encrypt(np.zeros(sctx.params.num_slots))
+    for w in widths:
+        server.warmup("warm", "a", {"x": ct0}, width=w)
+
+
+def _inputs_maker(sctx, record=None, poison=()):
+    nh = sctx.params.num_slots
+    rng = np.random.default_rng(29)
+    calls = {"n": 0}
+
+    def inputs_for(a):
+        z = rng.normal(size=nh) + 1j * rng.normal(size=nh)
+        ct = sctx.encrypt(z)
+        if calls["n"] in poison:
+            _corrupt_limb(ct)
+        calls["n"] += 1
+        if record is not None:
+            record.append((a, z))
+        return {"x": ct}
+
+    return inputs_for
+
+
+def _assert_accounted(rep):
+    assert rep.accounted == rep.submitted, \
+        f"unaccounted requests: {rep.to_dict()}"
+
+
+# ------------------------- taxonomy ------------------------------------
+def test_error_taxonomy_and_rendering():
+    """Hierarchy, context rendering, and the retryable classification."""
+    for cls in (LevelExhaustedError, ScaleDriftError,
+                ModulusChainMismatchError, CorruptCiphertextError):
+        assert issubclass(cls, CiphertextError)
+        assert issubclass(cls, ReproError)
+    for cls in (KeyUnavailableError, PlanCacheMissError,
+                TransientEngineError, InvalidRequestError):
+        assert issubclass(cls, ServingError)
+    err = KeyUnavailableError("keys gone", hint="re-enroll",
+                              tenant="t0", capacity=8)
+    assert err.context == {"tenant": "t0", "capacity": 8}
+    s = str(err)
+    assert "keys gone" in s and "tenant='t0'" in s and "re-enroll" in s
+    # retry policy: environment faults retry, data faults never do
+    assert is_retryable(TransientEngineError("x"))
+    assert is_retryable(KeyUnavailableError("x"))
+    assert not is_retryable(CorruptCiphertextError("x"))
+    assert not is_retryable(PlanCacheMissError("x"))
+    assert not is_retryable(ValueError("x"))
+
+
+def test_health_guards_typed(sctx):
+    """Core guards raise typed errors, not asserts or silent garbage."""
+    nh = sctx.params.num_slots
+    ct = sctx.encrypt(np.ones(nh))
+    sctx.check_ciphertext(ct)                       # healthy passes
+    bad = Ciphertext(ct.c0, ct.c1, ct.level, ct.scale)
+    _corrupt_limb(bad)
+    with pytest.raises(CorruptCiphertextError):
+        sctx.check_ciphertext(bad, where="test")
+    with pytest.raises(ScaleDriftError):
+        sctx.check_ciphertext(
+            Ciphertext(ct.c0, ct.c1, ct.level, float("nan")))
+    with pytest.raises(ModulusChainMismatchError):
+        sctx.check_ciphertext(                       # limbs != level+1
+            Ciphertext(ct.c0[:-1], ct.c1[:-1], ct.level, ct.scale))
+    # op guards: level mismatch and exhausted chain are typed too
+    low = sctx.level_down(ct, ct.level - 1)
+    with pytest.raises(ModulusChainMismatchError):
+        sctx.add(ct, low)
+    bottom = sctx.level_down(ct, 0)
+    with pytest.raises(LevelExhaustedError):
+        sctx.rescale(bottom)
+
+
+def test_evk_cache_admission_guard(sctx):
+    """A mis-shaped evk is rejected at the cache boundary with a typed
+    chain-mismatch error, not deep inside a jit trace."""
+    good = sctx.keys.mult_key
+    engine = sctx.engine
+    with pytest.raises(ModulusChainMismatchError):
+        engine._admit_evk(types.SimpleNamespace(digits=good.digits[:-1]))
+    clipped = [d[:, :-1, :] for d in good.digits]
+    with pytest.raises(ModulusChainMismatchError):
+        engine._admit_evk(types.SimpleNamespace(digits=clipped))
+
+
+def test_registry_eviction_typed_error(sctx):
+    """Evicted tenants surface KeyUnavailableError with the tenant id
+    and a remediation hint — never a raw KeyError."""
+    reg = TenantRegistry(sctx, capacity=2, base_seed=9000)
+    reg.keychain("A")
+    assert reg.evict("A", force=True)
+    with pytest.raises(KeyUnavailableError) as ei:
+        reg.keychain("A", create=False)
+    assert ei.value.context["tenant"] == "A"
+    assert "re-enroll" in str(ei.value)
+    with pytest.raises(KeyUnavailableError):
+        with reg.lease("A", create=False):
+            pass
+    with pytest.raises(ConfigError):
+        TenantRegistry(sctx, capacity=0)
+
+
+# ------------------------- chaos schedules -----------------------------
+def test_transient_faults_retry_to_completion(sctx, sprog):
+    """A seeded transient-fault schedule: every request completes via
+    retry/backoff, failed attempts are logged, accounting holds."""
+    faults = FaultInjector(FaultPlan(seed=21, p_transient=0.35))
+    server = _server(sctx, sprog, faults=faults, max_retries=4)
+    _warm(server, sctx, [1, 2])
+    trace = [Arrival(0.0, f"t{i % 2}", "a") for i in range(8)]
+    rep = server.run_trace(trace, _inputs_maker(sctx))
+    assert faults.injected["transient"] >= 1, "schedule never fired"
+    assert rep.completed == 8 and rep.failed == 0 and rep.shed == 0
+    assert rep.retries == faults.injected["transient"]
+    _assert_accounted(rep)
+    failed_recs = [r for r in server.records if not r.ok]
+    assert failed_recs and all(r.error == "TransientEngineError"
+                               for r in failed_recs)
+    # the retry that succeeded carries an attempt number > 0
+    assert any(r.ok and r.attempt > 0 for r in server.records)
+
+
+def test_key_eviction_recovers_and_decrypts(sctx, sprog):
+    """Mid-flight forced key evictions: the retry re-keygens from the
+    stable tenant seed and the outputs STILL decrypt correctly under
+    each tenant's key — recovery is bit-faithful, not just green."""
+    faults = FaultInjector(FaultPlan(seed=5, p_evict=0.4))
+    server = _server(sctx, sprog, faults=faults, max_retries=4)
+    _warm(server, sctx, [1, 2])
+    log: list = []
+    trace = [Arrival(0.0, t, "a") for t in
+             ["alice", "bob", "alice", "bob", "alice", "bob"]]
+    rep = server.run_trace(trace, _inputs_maker(sctx, record=log))
+    assert faults.injected["evict"] >= 1, "schedule never fired"
+    assert rep.completed == 6 and rep.failed == 0
+    # at least one eviction hit a resident tenant (a fault firing
+    # before the tenant's first lease is a no-op on the registry)
+    assert server.registry.evictions >= 1
+    _assert_accounted(rep)
+    _, diags = sprog
+    for rid, (a, z) in enumerate(log):
+        expect = sum(np.asarray(v) * np.roll(z, -d)
+                     for d, v in diags.items())
+        with server.registry.lease(a.tenant):
+            got = sctx.decrypt(server.outputs[rid]["y"])
+        np.testing.assert_allclose(got, expect, atol=1e-3)
+
+
+def test_corrupted_output_fails_only_its_request(sctx, sprog):
+    """Silent output corruption becomes exactly ONE request failure —
+    never a wrong result handed back, never a co-batched victim."""
+    faults = FaultInjector(FaultPlan(seed=3, p_corrupt=0.5))
+    server = _server(sctx, sprog, faults=faults)
+    _warm(server, sctx, [1, 2])
+    trace = [Arrival(0.0, "t0", "a") for _ in range(6)]
+    rep = server.run_trace(trace, _inputs_maker(sctx))
+    assert faults.injected["corrupt"] >= 1, "schedule never fired"
+    assert rep.failed == faults.injected["corrupt"]
+    assert rep.completed == 6 - rep.failed
+    assert rep.errors == {"CorruptCiphertextError": rep.failed}
+    _assert_accounted(rep)
+    # every completed output that was kept is healthy
+    for outs in server.outputs.values():
+        for ct in outs.values():
+            sctx.check_ciphertext(ct)
+
+
+def test_latency_spikes_consume_virtual_time(sctx, sprog):
+    """Injected latency spikes land in the virtual clock: every
+    dispatch's recorded duration includes the spike."""
+    faults = FaultInjector(FaultPlan(seed=7, p_spike=1.0, spike_s=0.5))
+    server = _server(sctx, sprog, faults=faults)
+    _warm(server, sctx, [1, 2])
+    trace = [Arrival(0.0, "t0", "a") for _ in range(4)]
+    rep = server.run_trace(trace, _inputs_maker(sctx))
+    assert rep.completed == 4
+    assert all(r.duration_s >= 0.5 for r in server.records)
+    assert rep.span_s >= 0.5 * len(server.records)
+
+
+# ------------------------- quarantine bisect ---------------------------
+def test_quarantine_bisect_isolates_poison(sctx, sprog):
+    """One poisoned request in a 4-wide batch: bisect re-dispatches
+    until the poison fails ALONE; the three victims complete."""
+    server = _server(sctx, sprog, max_batch=4)
+    _warm(server, sctx, [1, 2, 4])
+    trace = [Arrival(0.0, "t0", "a") for _ in range(4)]
+    rep = server.run_trace(trace, _inputs_maker(sctx, poison={2}),
+                           validate=True)
+    assert rep.completed == 3 and rep.failed == 1
+    assert rep.quarantine_splits == 2          # [0..3] -> [2,3] -> [2]
+    assert server.outcomes[2].startswith("failed:CorruptCiphertextError")
+    assert {r for r, o in server.outcomes.items()
+            if o == "completed"} == {0, 1, 3}
+    _assert_accounted(rep)
+    # the poisoned rid is the only one missing an output
+    assert set(server.outputs) == {0, 1, 3}
+
+
+# ------------------------- circuit breaker -----------------------------
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(threshold=2, cooldown_s=1.0)
+    assert br.allow("t", 0.0)
+    br.record_failure("t", 0.0)
+    assert br.allow("t", 0.0) and br.trips == 0
+    br.record_failure("t", 0.0)                # second consecutive: trip
+    assert br.trips == 1 and br.is_open("t", 0.5)
+    assert not br.allow("t", 0.5)
+    assert br.allow("t", 1.5)                  # half-open: one probe
+    assert not br.allow("t", 1.5)              # only one probe at a time
+    br.record_failure("t", 1.5)                # probe failed: re-open
+    assert br.trips == 2 and not br.allow("t", 2.0)
+    assert br.allow("t", 3.0)                  # next probe after cooldown
+    br.record_success("t")                     # probe ok: closed
+    assert br.allow("t", 3.0) and not br.is_open("t", 3.0)
+    with pytest.raises(ConfigError):
+        CircuitBreaker(threshold=0)
+
+
+def test_breaker_sheds_poison_tenant(sctx, sprog):
+    """A tenant failing repeatedly trips its breaker: later requests
+    are shed without touching the engine; other tenants are unharmed."""
+    server = _server(sctx, sprog, max_batch=1,
+                     breaker=CircuitBreaker(threshold=2, cooldown_s=1e9))
+    _warm(server, sctx, [1])
+    trace = [Arrival(0.0, "evil", "a"), Arrival(0.0, "evil", "a"),
+             Arrival(0.0, "evil", "a"), Arrival(0.0, "good", "a"),
+             Arrival(0.0, "good", "a")]
+    rep = server.run_trace(trace, _inputs_maker(sctx, poison={0, 1, 2}),
+                           validate=True)
+    assert rep.failed == 2                     # two failures trip it
+    assert rep.shed == 1 and rep.shed_reasons == {"breaker_open": 1}
+    assert rep.breaker_trips == 1
+    assert rep.tenants["good"]["completed"] == 2
+    assert rep.tenants["evil"]["failed"] == 2
+    assert rep.tenants["evil"]["shed"] == 1
+    _assert_accounted(rep)
+
+
+# ------------------------- deadlines + shedding ------------------------
+def test_deadline_expired_requests_shed_not_executed(sctx, sprog):
+    """Requests whose virtual deadline passed while queued are shed —
+    no engine dispatch ever runs for them."""
+    server = _server(sctx, sprog, max_batch=1)
+    _warm(server, sctx, [1])
+    trace = [Arrival(0.0, "t0", "a") for _ in range(4)]
+    rep = server.run_trace(trace, _inputs_maker(sctx), deadline_s=1e-9)
+    assert rep.completed == 1                  # only the first makes it
+    assert rep.shed == 3
+    assert rep.shed_reasons == {"deadline": 3}
+    _assert_accounted(rep)
+    executed = {r for rec in server.records for r in rec.rids}
+    assert executed == {0}, "a shed request was executed"
+
+
+def test_overload_shed_at_submit(sctx, sprog):
+    """When the EWMA service estimate says the queue wait blows the
+    deadline headroom, submit refuses with reason ``overload``."""
+    server = _server(sctx, sprog)
+    ct = sctx.encrypt(np.zeros(sctx.params.num_slots))
+    server._ewma_service_s = 100.0             # pretend service is slow
+    ok = server.submit("t0", "a", {"x": ct}, arrival=0.0, deadline=1.0)
+    assert not ok
+    assert server.shed_reasons == {"overload": 1}
+    assert server._stats("t0").shed == 1
+    assert server.submitted == 1
+
+
+def test_submit_typed_validation(sctx, sprog):
+    server = _server(sctx, sprog)
+    ct = sctx.encrypt(np.zeros(sctx.params.num_slots))
+    with pytest.raises(InvalidRequestError):
+        server.submit("t0", "nope", {"x": ct}, arrival=0.0)
+    with pytest.raises(InvalidRequestError):
+        server.submit("t0", "a", {}, arrival=0.0)
+    assert server.submitted == 0               # invalid never counted
+
+
+# ------------------------- strict plan admission -----------------------
+def test_strict_plan_cache(sctx, sprog):
+    """PlanCache.require refuses cold shapes; a strict server turns the
+    refusal into an accounted request failure, not a trace stall."""
+    pc = PlanCache()
+    with pytest.raises(PlanCacheMissError):
+        pc.require(("sig",), 2)
+    pc.admit(("sig",), 2)
+    pc.require(("sig",), 2)                    # warm: no raise
+
+    server = _server(sctx, sprog, strict_plans=True)   # NO warmup
+    trace = [Arrival(0.0, "t0", "a")]
+    rep = server.run_trace(trace, _inputs_maker(sctx))
+    assert rep.completed == 0 and rep.failed == 1
+    assert rep.errors == {"PlanCacheMissError": 1}
+    _assert_accounted(rep)
+
+
+# ------------------------- zero retraces with validation ---------------
+def test_validation_adds_zero_retraces(sctx, sprog):
+    """Invariant-guard mode runs outside jit: after warmup, serving a
+    trace with validate=True leaves ``engine.trace_counts`` unchanged."""
+    server = _server(sctx, sprog)
+    _warm(server, sctx, [1, 2])
+    before = dict(sctx.engine.trace_counts)
+    trace = [Arrival(0.0, "t0", "a") for _ in range(6)]
+    rep = server.run_trace(trace, _inputs_maker(sctx), validate=True)
+    assert rep.completed == 6
+    assert dict(sctx.engine.trace_counts) == before, \
+        "validation mode retraced a jit plan"
+
+
+# ------------------------- record schema -------------------------------
+def test_batch_record_failure_fields(sctx, sprog):
+    """BatchRecord carries the failure schema simfeed and the bench
+    read: ok flag, typed error name, attempt number."""
+    from repro.serve import BatchRecord
+
+    fields = {f.name for f in dataclasses.fields(BatchRecord)}
+    assert {"ok", "error", "attempt"} <= fields

@@ -1,0 +1,104 @@
+"""Property tests for fault-tolerant serving (hypothesis; skipped when
+hypothesis is not installed — CI installs it via ``.[test]``).
+
+THE accounting property: for ANY seeded chaos schedule (transient
+faults, key evictions, output corruption), ANY batch/queue/retry
+configuration, every submitted request reaches exactly one terminal
+outcome — ``completed + failed + shed + rejected == submitted``.  The
+engine dispatch is stubbed (health-checkable ciphertexts, zero real
+FHE work) so hypothesis can explore hundreds of schedules in seconds;
+the real-engine versions of these paths are pinned by
+``tests/test_faults.py``.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import linear  # noqa: E402
+from repro.core.ckks import CKKSContext, Ciphertext  # noqa: E402
+from repro.core.params import CKKSParams  # noqa: E402
+from repro.runtime import TraceContext, compile_program  # noqa: E402
+from repro.runtime.exec import ExecResult  # noqa: E402
+from repro.serve import (  # noqa: E402
+    Arrival, CircuitBreaker, FaultInjector, FaultPlan, FHEServer,
+)
+
+
+@pytest.fixture(scope="module")
+def sctx():
+    params = CKKSParams(logN=8, L=4, alpha=2, k=2, q_bits=29,
+                        scale_bits=29)
+    return CKKSContext(params, seed=3)
+
+
+@pytest.fixture(scope="module")
+def sprog(sctx):
+    params = sctx.params
+    rng = np.random.default_rng(11)
+    diags = {d: rng.normal(size=params.num_slots) for d in range(3)}
+    tc = TraceContext(params)
+    h = tc.input("x", level=params.L, scale=params.scale)
+    tc.output(linear.matvec_diag(tc, h, diags), "y")
+    return compile_program(tc)
+
+
+@pytest.fixture(scope="module")
+def ct0(sctx):
+    return sctx.encrypt(np.zeros(sctx.params.num_slots))
+
+
+def _stub_executor(server, ct):
+    """Replace the engine dispatch with an instant fake that returns
+    fresh healthy ciphertext wrappers (so injected corruption of one
+    slot never aliases another slot or a later dispatch)."""
+    def fake_run_batched(compiled, stacked, with_report=False,
+                         validate=False):
+        B = len(next(iter(stacked.values())))
+        outs = [Ciphertext(ct.c0, ct.c1, ct.level, ct.scale)
+                for _ in range(B)]
+        return ExecResult({"y": outs})
+
+    server.executor.run_batched = fake_run_batched
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(seed=st.integers(0, 2 ** 16),
+       p_transient=st.floats(0.0, 0.5),
+       p_evict=st.floats(0.0, 0.5),
+       p_corrupt=st.floats(0.0, 0.5),
+       n=st.integers(1, 12),
+       max_batch=st.integers(1, 4),
+       max_retries=st.integers(0, 3),
+       queue_size=st.integers(1, 8))
+def test_every_request_terminally_accounted(
+        sctx, sprog, ct0, seed, p_transient, p_evict, p_corrupt, n,
+        max_batch, max_retries, queue_size):
+    faults = FaultInjector(FaultPlan(
+        seed=seed, p_transient=p_transient, p_evict=p_evict,
+        p_corrupt=p_corrupt))
+    server = FHEServer(
+        sctx, max_batch=max_batch, max_wait_s=0.0,
+        queue_size=queue_size, faults=faults, max_retries=max_retries,
+        breaker=CircuitBreaker(threshold=2, cooldown_s=1e-6))
+    server.register_program("a", sprog)
+    _stub_executor(server, ct0)
+
+    trace = [Arrival(0.0, f"t{i % 3}", "a") for i in range(n)]
+    rep = server.run_trace(
+        trace, lambda a: {"x": Ciphertext(ct0.c0, ct0.c1, ct0.level,
+                                          ct0.scale)})
+
+    assert rep.submitted == n
+    assert rep.accounted == n, \
+        f"lost requests under chaos: {rep.to_dict()}"
+    # per-tenant view reconciles with the aggregate
+    assert sum(t["completed"] + t["failed"] + t["shed"] + t["rejected"]
+               for t in rep.tenants.values()) == n
+    # every queued request carries a terminal outcome string
+    for rid, outcome in server.outcomes.items():
+        assert outcome == "completed" or outcome.startswith("failed:") \
+            or outcome.startswith("shed:")
