@@ -32,12 +32,24 @@ timeline-integrated energy of the executed plan via
   * steady-state compiled wall clock at least GATE_COMPILED_SPEEDUP x
     faster than the eager pipeline (plaintext/evk caching + shared
     ModUps; measured after one warmup run absorbing jit traces)
+  * HE2-SM communication-stall fraction of the scheduled plan within
+    the calibrated per-shape budget (``STALL_BUDGET``; shapes without a
+    recorded budget record the fraction and skip the gate, the paper's
+    6.67% operating point is stored alongside for reference)
+  * observability off by default costs <2% of the compiled runtime
+    (``GATE_DISABLED_OVERHEAD``: a measured per-disabled-span cost
+    scaled to the program's step count)
+
+With ``--trace`` one extra compiled run executes under ``repro.obs``
+tracing and a combined Perfetto timeline (real executor wall clock +
+HE2-SM virtual schedule) lands in results/trace_bootstrap.json.
 """
 from __future__ import annotations
 
 import json
 import pathlib
 import time
+import timeit
 
 import numpy as np
 
@@ -57,6 +69,22 @@ GATE_COMPILED_SPEEDUP = 1.1
 # must land strictly below these.
 PR4_COMPILED_MODUPS = {True: 65}      # keyed by common.SMOKE
 
+# Communication-stall budget for the scheduled HE2-SM plan, keyed by
+# common.SMOKE like PR4_COMPILED_MODUPS.  The paper's 6.67% claim
+# (Sec. VI) holds at its large-N operating point (logN~16, deep L); the
+# smoke shape (logN=8) is link-bound — tiny limbs amortize no compute
+# under the transfers — and sits at ~0.34, so the smoke budget is a
+# calibrated regression bound (catch a scheduler/fusion regression that
+# widens stalls), not the paper claim itself.  Shapes without an entry
+# record the measured fraction and skip the gate.
+STALL_BUDGET = {True: 0.40}           # keyed by common.SMOKE
+
+# Disabled-observability overhead gate: with obs off, the executor pays
+# one disabled span() call per run plus a per-step bool check.  We bound
+# a conservative estimate — (steps + 2) disabled-span calls at the
+# measured per-call cost — by 2% of the compiled steady-state runtime.
+GATE_DISABLED_OVERHEAD = 0.02
+
 
 def _time(fn, reps: int) -> float:
     """us/run after one warmup (jit traces + plaintext caches)."""
@@ -70,6 +98,7 @@ def _time(fn, reps: int) -> float:
 
 
 def run() -> list[str]:
+    from repro import obs
     from repro.core.bootstrap import Bootstrapper
     from repro.core.ckks import CKKSContext
     from repro.core.params import CKKSParams
@@ -94,6 +123,8 @@ def run() -> list[str]:
     z = (rng.normal(size=nh) + 1j * rng.normal(size=nh)) * 0.01
     ct0 = ctx.encrypt(z, level=0)
 
+    common.log(f"bootstrap: compiling (logN={logn}, L={L}, "
+               f"cheb={cheb_degree})")
     comp = btp.compile(input_scale=ct0.scale)
     comp_multi = btp.compile(input_scale=ct0.scale, exact=False)
     ex = ProgramExecutor(ctx)
@@ -104,6 +135,7 @@ def run() -> list[str]:
         d = ctx.counters.delta(before)
         return out, d
 
+    common.log("bootstrap: eager/compiled/multi pipelines (counting ops)")
     out_eager, d_eager = counts(lambda: btp.bootstrap(ct0))
     res, d_comp = counts(
         lambda: ex.run(comp, {"ct": ct0}, with_report=True))
@@ -118,6 +150,23 @@ def run() -> list[str]:
     sched = res.report.scheduled_result(comp, HE2_SM)
     reconciled = res.report.reconcile()
 
+    # Communication-stall budget on the scheduled HE2-SM timelines.
+    sb_budget = STALL_BUDGET.get(common.SMOKE)
+    stall = obs.analyze(sched.timelines, latency_s=sched.latency_s,
+                        name="bootstrap-he2sm",
+                        budget=(sb_budget if sb_budget is not None
+                                else obs.PAPER_STALL_BUDGET))
+    common.log(f"bootstrap: HE2-SM comm-stall {stall.fraction:.4f} "
+               f"(budget {sb_budget})")
+
+    # Publish the run's accounting into the global metrics registry so
+    # the exposition in the JSON record reconciles with OpCounters and
+    # the scheduler's energy breakdown.
+    obs.publish_counters(obs.METRICS, ctx.counters)
+    obs.publish_energy(obs.METRICS, sched.energy_by_engine,
+                       config="HE2-SM")
+
+    common.log("bootstrap: timing steady-state pipelines")
     t = {
         "eager": _time(lambda: btp.bootstrap(ct0), reps),
         "compiled": _time(lambda: ex.run(comp, {"ct": ct0})["out"], reps),
@@ -125,6 +174,20 @@ def run() -> list[str]:
                        reps),
     }
     speedup = {kk: t["eager"] / v for kk, v in t.items()}
+
+    # Disabled-overhead estimate: measure one disabled obs.span() call,
+    # scale to (steps + 2) calls per run, compare against the compiled
+    # steady-state runtime.  obs must be off here (the default).
+    assert not obs.enabled(), "obs must be disabled for the overhead gate"
+    n_calls = 20000
+    per_span_s = timeit.timeit(
+        lambda: obs.span("bench.noop", step=1), number=n_calls) / n_calls
+    compiled_s = t["compiled"] * 1e-6
+    overhead_s = (len(comp.steps) + 2) * per_span_s
+    overhead_frac = overhead_s / compiled_s if compiled_s else 0.0
+    common.log(f"bootstrap: disabled-obs overhead "
+               f"{overhead_s * 1e6:.2f}us / compiled "
+               f"{t['compiled']:.0f}us ({overhead_frac:.4%})")
 
     summary = {
         "params": {"logN": logn, "L": L, "alpha": alpha, "k": k,
@@ -147,6 +210,22 @@ def run() -> list[str]:
         "scheduled_he2_sm_energy_mj": sched.energy_j * 1e3,
         "us_per_bootstrap": t,
         "speedup_vs_eager": speedup,
+        "stall_budget": {
+            **stall.as_dict(),
+            "paper_budget_frac": obs.PAPER_STALL_BUDGET,
+            "gated": sb_budget is not None,
+        },
+        "disabled_overhead": {
+            "per_span_ns": per_span_s * 1e9,
+            "est_overhead_us": overhead_s * 1e6,
+            "compiled_us": t["compiled"],
+            "frac": overhead_frac,
+        },
+        "metrics": {
+            name: fam["series"]
+            for name, fam in obs.METRICS.snapshot().items()
+            if name.startswith(("fhe.", "sim."))
+        },
     }
 
     # Evaluate every gate BEFORE writing the JSON so the on-disk record
@@ -178,16 +257,48 @@ def run() -> list[str]:
             speedup["compiled"] >= GATE_COMPILED_SPEEDUP,
             f"compiled {speedup['compiled']:.2f}x < "
             f"{GATE_COMPILED_SPEEDUP}x vs eager"),
+        "stall_budget": (
+            # calibrated per shape; record-only when no budget recorded
+            True if sb_budget is None else stall.fraction <= sb_budget,
+            f"HE2-SM comm-stall {stall.fraction:.4f} > "
+            f"budget {sb_budget}"),
+        "disabled_overhead": (
+            overhead_frac < GATE_DISABLED_OVERHEAD,
+            f"disabled obs overhead {overhead_frac:.4%} !< "
+            f"{GATE_DISABLED_OVERHEAD:.0%} of compiled runtime"),
     }
     summary["gate"] = {
         "compiled_min_speedup": GATE_COMPILED_SPEEDUP,
         "compiled_speedup": speedup["compiled"],
         "pr4_compiled_modups": pr4,
+        "stall_budget_frac": sb_budget,
+        "disabled_overhead_max": GATE_DISABLED_OVERHEAD,
         "results": {name: ok for name, (ok, _) in gates.items()},
         "passed": all(ok for ok, _ in gates.values()),
     }
     (RESULTS / "BENCH_bootstrap.json").write_text(
         json.dumps(summary, indent=2))
+
+    if common.TRACE:
+        # One extra compiled run under tracing, AFTER the gated timing
+        # loops so per-step syncs never perturb the measurements.  The
+        # artifact pairs the real executor wall clock with the HE2-SM
+        # virtual schedule in a single Perfetto timeline.
+        common.log("bootstrap: tracing one compiled run for Perfetto")
+        obs.TRACER.reset()
+        obs.enable()
+        try:
+            with obs.span("bench.bootstrap", smoke=common.SMOKE,
+                          logN=logn, L=L):
+                ex.run(comp, {"ct": ct0})
+        finally:
+            obs.disable()
+        trace_path = RESULTS / "trace_bootstrap.json"
+        obs.export.write_trace(
+            trace_path, tracer=obs.TRACER, timelines=sched.timelines,
+            sim_process="HE2-SM schedule (virtual clock)")
+        obs.TRACER.reset()
+        common.log(f"bootstrap: wrote {trace_path}")
 
     lines = [
         f"bootstrap/{kk},{v:.0f},speedup={speedup[kk]:.2f}x"
@@ -205,10 +316,23 @@ def run() -> list[str]:
         f"bootstrap/sched_energy_mj,{sched.energy_j * 1e3:.4f},"
         f"latency_ms={sched.latency_s * 1e3:.4f}"
     )
+    lines.append(
+        f"bootstrap/comm_stall,{stall.comm_stall_s * 1e6:.2f},"
+        f"frac={stall.fraction:.4f};budget={sb_budget};"
+        f"paper={obs.PAPER_STALL_BUDGET}"
+    )
+    lines.append(
+        f"bootstrap/obs_disabled_overhead,{overhead_s * 1e6:.2f},"
+        f"frac={overhead_frac:.5f};max={GATE_DISABLED_OVERHEAD}"
+    )
     if pr4 is None:
         lines.append("bootstrap/pr4_gate,0,skipped=no PR-4 baseline "
                      "recorded for this shape (smoke only)")
+    if sb_budget is None:
+        lines.append("bootstrap/stall_gate,0,recorded-only=no "
+                     "calibrated stall budget for this shape")
     for name, (ok, msg) in gates.items():
         if not ok:
             raise RuntimeError(f"bootstrap {name} gate FAILED: {msg}")
+    common.log("bootstrap: all gates passed")
     return lines

@@ -18,9 +18,19 @@ onto the HE^2-SM hardware timelines (what the paper's scheduler would
 do with this traffic).
 
 ENFORCED gates: continuous batching must (a) beat the serial loop by
->= 2x in completed-requests throughput on the virtual clock and
+>= 2x in completed-requests throughput on the virtual clock,
 (b) retrace NOTHING — the engine's jit ``trace_counts`` must be flat
-across the whole served trace.
+across the whole served trace — and (c) keep the hardware replay's
+communication-stall fraction within the calibrated per-shape budget
+(``STALL_BUDGET``; unrecorded shapes record the fraction and skip the
+gate).
+
+``--trace`` (``benchmarks.common.TRACE``) reruns a short prefix of the
+trace under ``repro.obs`` span tracing — AFTER the gated runs, so the
+per-dispatch instrumentation never perturbs the measured speedup — and
+writes results/trace_serving.json: real serve-loop spans, the virtual-
+clock request lanes, and the HE2-SM replay timelines in one Perfetto
+file.
 
 ``--chaos`` (``benchmarks.common.CHAOS``) reruns the continuous loop
 under a seeded ``serve.faults.FaultPlan`` (5% transient engine faults
@@ -49,6 +59,14 @@ GATE_SERVING_SPEEDUP = 2.0
 # Chaos gate (CI, --chaos): goodput under the fault schedule must stay
 # within this fraction of the fault-free run's throughput.
 GATE_CHAOS_GOODPUT = 0.8
+
+# Communication-stall budget for the HE2-SM replay of the continuous
+# run's batch log, keyed by common.SMOKE (same convention as
+# bench_bootstrap.STALL_BUDGET): the smoke programs (logN=8) are
+# link-bound and sit near 0.40, so this is a calibrated regression
+# bound on the scheduler/replay path, not the paper's large-N 6.67%
+# claim (recorded alongside in the JSON for reference).
+STALL_BUDGET = {True: 0.45}           # keyed by common.SMOKE
 
 TENANTS = ["alice", "bob", "carol"]
 
@@ -229,6 +247,7 @@ def _run_chaos() -> list[str]:
 
 
 def run() -> list[str]:
+    from repro import obs
     from repro.core.ckks import CKKSContext
     from repro.serve import poisson_trace, replay_on_hardware
     from repro.sim import HE2_SM
@@ -251,9 +270,11 @@ def run() -> list[str]:
                           seed=common.SEED,
                           program_weights={"cheb": 0.75, "matvec": 0.25})
 
+    common.log(f"serving: serial loop ({n_req} requests)")
     srv_serial, rep_serial, wall_serial, _ = _serve(
         ctx, programs, trace, max_batch, serial=True)
 
+    common.log("serving: continuous-batching loop")
     srv_cont, rep_cont, wall_cont, live_retraces = _serve(
         ctx, programs, trace, max_batch, serial=False)
     warm_misses = rep_cont.plan_cache["misses"]
@@ -262,7 +283,22 @@ def run() -> list[str]:
     tput_cont = rep_cont.completed / rep_cont.span_s
     speedup = tput_cont / tput_serial if tput_serial else 0.0
 
-    replay = replay_on_hardware(srv_cont.records, programs, HE2_SM)
+    common.log("serving: replaying batch log on HE2-SM timelines")
+    replay, pipe = replay_on_hardware(srv_cont.records, programs,
+                                      HE2_SM, with_result=True)
+
+    # Communication-stall budget on the replayed HE2-SM timelines.
+    sb_budget = STALL_BUDGET.get(common.SMOKE)
+    stall = obs.analyze(pipe.timelines, latency_s=pipe.latency_s,
+                        name="serving-he2sm-replay",
+                        budget=(sb_budget if sb_budget is not None
+                                else obs.PAPER_STALL_BUDGET))
+    common.log(f"serving: replay comm-stall {stall.fraction:.4f} "
+               f"(budget {sb_budget})")
+
+    # Publish the continuous run into the global metrics registry; the
+    # embedded exposition reconciles with ServingReport.accounted.
+    obs.publish_serving(obs.METRICS, rep_cont)
 
     summary = {
         "params": {"logN": logn, "L": 9, "alpha": 2, "k": 3,
@@ -278,13 +314,48 @@ def run() -> list[str]:
         "live_retraces": live_retraces,
         "warmup_misses": warm_misses,
         "sim_replay": replay,
+        "stall_budget": {
+            **stall.as_dict(),
+            "paper_budget_frac": obs.PAPER_STALL_BUDGET,
+            "gated": sb_budget is not None,
+        },
+        "metrics": {
+            name: fam["series"]
+            for name, fam in obs.METRICS.snapshot().items()
+            if name.startswith("serving.")
+        },
         "gate": {"min_speedup": GATE_SERVING_SPEEDUP,
                  "speedup": speedup,
+                 "stall_budget_frac": sb_budget,
                  "passed": (speedup >= GATE_SERVING_SPEEDUP
-                            and live_retraces == 0)},
+                            and live_retraces == 0
+                            and (sb_budget is None
+                                 or stall.fraction <= sb_budget))},
     }
     (RESULTS / "BENCH_serving.json").write_text(
         json.dumps(summary, indent=2))
+
+    if common.TRACE:
+        # Short traced pass AFTER the gated runs: the first 16 arrivals
+        # re-served with span tracing on, combined with the gated run's
+        # replay timelines into one Perfetto file.
+        common.log("serving: tracing a 16-request prefix for Perfetto")
+        obs.TRACER.reset()
+        obs.enable()
+        try:
+            with obs.span("bench.serving", smoke=common.SMOKE,
+                          requests=min(16, len(trace))):
+                srv_tr, _, _, _ = _serve(ctx, programs, trace[:16],
+                                         max_batch, serial=False)
+        finally:
+            obs.disable()
+        trace_path = RESULTS / "trace_serving.json"
+        obs.export.write_trace(
+            trace_path, tracer=obs.TRACER, timelines=pipe.timelines,
+            request_log=srv_tr.request_log,
+            sim_process="HE2-SM replay (virtual clock)")
+        obs.TRACER.reset()
+        common.log(f"serving: wrote {trace_path}")
 
     lines = [
         f"serving/serial,{rep_serial.span_s*1e6:.0f},"
@@ -298,7 +369,13 @@ def run() -> list[str]:
         f"serving/sim_replay,{replay['pipelined_s']*1e6:.0f},"
         f"hw_speedup={replay['speedup']:.2f}x;"
         f"link_util={replay['utilization'].get('link', 0):.2f}",
+        f"serving/comm_stall,{stall.comm_stall_s*1e6:.2f},"
+        f"frac={stall.fraction:.4f};budget={sb_budget};"
+        f"paper={obs.PAPER_STALL_BUDGET}",
     ]
+    if sb_budget is None:
+        lines.append("serving/stall_gate,0,recorded-only=no calibrated "
+                     "stall budget for this shape")
     for t, s in rep_cont.to_dict()["tenants"].items():
         lines.append(
             f"serving/tenant_{t},{s['p50_latency_s']*1e6:.0f},"
@@ -311,4 +388,9 @@ def run() -> list[str]:
         raise RuntimeError(
             f"serving perf gate FAILED: continuous batching "
             f"{speedup:.2f}x < {GATE_SERVING_SPEEDUP}x vs serial loop")
+    if sb_budget is not None and stall.fraction > sb_budget:
+        raise RuntimeError(
+            f"serving stall-budget gate FAILED: HE2-SM replay "
+            f"comm-stall {stall.fraction:.4f} > budget {sb_budget}")
+    common.log("serving: all gates passed")
     return lines

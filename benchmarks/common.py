@@ -12,6 +12,9 @@ Pairing convention (paper Secs. VI-VII):
 """
 from __future__ import annotations
 
+import sys
+import time
+
 from repro.dfg.programs import (
     bert_dfg, bootstrapping_dfg, helr_dfg, resnet_dfg,
 )
@@ -39,6 +42,33 @@ SEED = 0
 # goodput >= 0.8x the fault-free run, zero added retraces.  Only the
 # serving module consumes it.  Toggled by benchmarks.run.
 CHAOS = False
+
+# --quiet: suppress info-level progress logging (warn/error still
+# print).  Toggled by benchmarks.run.
+QUIET = False
+
+# --trace: the bootstrap and serving benches run one obs-traced pass
+# and write Perfetto trace JSONs (trace_bootstrap.json /
+# trace_serving.json under benchmarks/results/, uploaded by CI).
+# Toggled by benchmarks.run.
+TRACE = False
+
+_T0 = time.perf_counter()
+
+
+def log(msg: str, level: str = "info") -> None:
+    """Structured, level-gated progress line on stderr.
+
+    ``bench t=<s> level=<level> <msg>`` — greppable in CI logs
+    (``grep 'level=warn'``), and on stderr so the CSV result lines on
+    stdout stay machine-readable.  ``--quiet`` gates info lines out;
+    warn/error always print.
+    """
+    if QUIET and level == "info":
+        return
+    t = time.perf_counter() - _T0
+    print(f"bench t={t:8.2f}s level={level} {msg}",
+          file=sys.stderr, flush=True)
 
 
 def smoke_subset(benches: list[str]) -> list[str]:

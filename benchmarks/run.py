@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV lines and writes JSON results to
 benchmarks/results/ (consumed by EXPERIMENTS.md).
 
 Usage: python -m benchmarks.run [table4|fig14|...|all]
-                                [--smoke] [--seed N] [--chaos] [--list]
+                                [--smoke] [--seed N] [--chaos]
+                                [--quiet] [--trace] [--list]
 
 --smoke restricts every module to its cheapest workload (CI fast path).
 --seed  sets the shared base seed (``benchmarks.common.SEED``) that the
@@ -14,6 +15,11 @@ Usage: python -m benchmarks.run [table4|fig14|...|all]
         schedule and gates on recovery (accounting, goodput, victims,
         retraces); the chaos report lands under the ``"chaos"`` key of
         BENCH_serving.json next to the fault-free run's numbers.
+--quiet gates out info-level ``benchmarks.common.log`` progress lines
+        (warn/error still print; CSV results are unaffected).
+--trace makes the bootstrap and serving benches run one obs-traced
+        pass and write Perfetto traces (benchmarks/results/
+        trace_bootstrap.json / trace_serving.json, CI artifacts).
 --list  prints the available module names with a one-line description
         and exits.
 """
@@ -52,6 +58,8 @@ def main() -> None:
         return
     common.SMOKE = "--smoke" in argv
     common.CHAOS = "--chaos" in argv
+    common.QUIET = "--quiet" in argv
+    common.TRACE = "--trace" in argv
     args, it = [], iter(argv)
     for a in it:
         if a == "--seed":

@@ -70,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import poly
 from repro.core.counters import OpCounters
 from repro.errors import ModulusChainMismatchError
@@ -245,7 +246,12 @@ class KeyswitchEngine:
         return self._plans[level]
 
     def _count_trace(self, key: tuple) -> None:
-        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+        n = self.trace_counts.get(key, 0) + 1
+        self.trace_counts[key] = n
+        # a repeat trace of the same plan key is a retrace — exactly
+        # what the serving layer's zero-retrace gate hunts for
+        obs.event("engine.jit_trace", key=str(key), count=n,
+                  retrace=n > 1)
 
     # ------------------------- evk stacking ----------------------------
     def _admit_evk(self, evk: EvalKey) -> None:
@@ -278,6 +284,7 @@ class KeyswitchEngine:
         if key not in self._evk_full:
             self._admit_evk(evk)
             self._evk_full[key] = (evk, jnp.stack(evk.digits))
+            obs.event("engine.evk_admit", cached=len(self._evk_full))
         return self._evk_full[key][1]
 
     def evk_tensor(self, evk: EvalKey, level: int) -> jnp.ndarray:

@@ -26,6 +26,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
 from repro.core.params import CKKSParams
 from repro.dfg.graph import DFG, OpKind
 from repro.dfg.trace import ProgramBuilder
@@ -109,11 +110,14 @@ class TraceContext:
         h = self._emit(OpKind.INPUT, (), level, scale, tag=tag)
         self.g.nodes[h.nid].attrs["level"] = level
         self.inputs[tag] = h.nid
+        obs.event("trace.input", tag=tag, level=level, nid=h.nid)
         return h
 
     def output(self, h: TraceHandle, tag: str = "out") -> int:
         nid = self.g.add(OpKind.OUTPUT, (h.nid,), limbs=h.n_limbs, tag=tag)
         self.outputs[tag] = h.nid
+        obs.event("trace.output", tag=tag, nid=nid,
+                  nodes=len(self.g.nodes))
         return nid
 
     # ------------------------- encode ----------------------------------
@@ -340,5 +344,12 @@ def compile_program(tc: TraceContext, fusion: bool = False,
     """
     from repro.runtime.lower import lower_program
 
-    return lower_program(tc, fusion=fusion, capacity_words=capacity_words,
-                         max_group=max_group, exact=exact)
+    with obs.span("compile.program", nodes=len(tc.g.nodes),
+                  fusion=fusion, exact=exact) as sp:
+        compiled = lower_program(tc, fusion=fusion,
+                                 capacity_words=capacity_words,
+                                 max_group=max_group, exact=exact)
+        if sp:
+            sp.set_attrs(**{k: v for k, v in compiled.summary().items()
+                            if isinstance(v, (int, float, bool, str))})
+    return compiled

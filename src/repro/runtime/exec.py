@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import poly
 from repro.core.ckks import CKKSContext, Ciphertext, Plaintext, \
     tensor_product
@@ -165,23 +166,27 @@ class ProgramExecutor:
         values: dict[int, Ciphertext] = {}
         digits: dict[int, object] = {}
         outputs: dict[str, Ciphertext] = {}
-        for step in compiled.steps:
-            if isinstance(step, HoistedStep):
-                self._exec_hoisted(compiled, step, values, digits, batch)
-            elif isinstance(step, MultiHoistedStep):
-                self._exec_multi(compiled, step, values, digits, batch)
-            elif isinstance(step, RelinStep):
-                self._exec_relin(compiled, step, values, batch)
-            elif isinstance(step, MultiRelinStep):
-                self._exec_multi_relin(compiled, step, values, batch)
-            else:
-                self._exec_eager(compiled, step, values, outputs, inputs,
-                                 batch, validate)
-            if validate and isinstance(step, KeyswitchFamilyStep):
-                self._check_block(step, values[step.out])
-        if validate:
-            for tag, ct in outputs.items():
-                ctx.check_ciphertext(ct, where=f"output '{tag}'")
+        # Prefetch the enabled flag once: the disabled hot path is one
+        # boolean per step (plus the no-op run span below).
+        tracing = obs.TRACER.enabled
+        with obs.span("exec.run", batch=batch,
+                      n_steps=len(compiled.steps), validate=validate):
+            for step in compiled.steps:
+                if tracing:
+                    self._exec_step_traced(compiled, step, values, digits,
+                                           outputs, inputs, batch, validate)
+                else:
+                    self._exec_step(compiled, step, values, digits,
+                                    outputs, inputs, batch, validate)
+                if validate and isinstance(step, KeyswitchFamilyStep):
+                    try:
+                        self._check_block(step, values[step.out])
+                    except Exception as err:
+                        self._note_validate_failure(compiled, step, err)
+                        raise
+            if validate:
+                for tag, ct in outputs.items():
+                    ctx.check_ciphertext(ct, where=f"output '{tag}'")
         report = None
         if with_report:
             from repro.runtime.report import build_report
@@ -191,6 +196,68 @@ class ProgramExecutor:
                 batch=max(batch, 1),
             )
         return ExecResult(outputs, report)
+
+    # ------------------------- step dispatch ---------------------------
+    def _exec_step(self, compiled, step, values, digits, outputs, inputs,
+                   batch: int, validate: bool) -> None:
+        if isinstance(step, HoistedStep):
+            self._exec_hoisted(compiled, step, values, digits, batch)
+        elif isinstance(step, MultiHoistedStep):
+            self._exec_multi(compiled, step, values, digits, batch)
+        elif isinstance(step, RelinStep):
+            self._exec_relin(compiled, step, values, batch)
+        elif isinstance(step, MultiRelinStep):
+            self._exec_multi_relin(compiled, step, values, batch)
+        else:
+            self._exec_eager(compiled, step, values, outputs, inputs,
+                             batch, validate)
+
+    def _step_label(self, compiled, step) -> tuple[str, int]:
+        if isinstance(step, KeyswitchFamilyStep):
+            return type(step).__name__, step.out
+        return compiled.dfg.nodes[step.nid].op.value, step.nid
+
+    def _exec_step_traced(self, compiled, step, values, digits, outputs,
+                          inputs, batch: int, validate: bool) -> None:
+        """Tracing mirror of ``_exec_step``: one span per step carrying
+        the real wall clock (``block_until_ready`` on the produced ct —
+        a device sync, which is why this path is opt-in) and the op
+        counts the step actually incremented.  The dispatched code is
+        byte-identical, so jit plan caches see the same trace keys."""
+        ctx = self.ctx
+        label, out_id = self._step_label(compiled, step)
+        before = ctx.counters.snapshot()
+        with obs.span(f"exec.step.{label}", out=out_id, batch=batch,
+                      level=getattr(step, "level", None)) as sp:
+            self._exec_step(compiled, step, values, digits, outputs,
+                            inputs, batch, validate)
+            out = values.get(out_id)
+            if out is not None:
+                jax.block_until_ready(out.c0)
+                jax.block_until_ready(out.c1)
+            d = ctx.counters.delta(before)
+            sp.set_attrs(modup=d.modup, moddown=d.moddown, ip=d.ip,
+                         keyswitch=d.keyswitch, relin=d.relin)
+
+    def _note_validate_failure(self, compiled, step, err) -> None:
+        """Chaos-run traces show WHERE a poisoned ciphertext was caught:
+        attach the failing block's dfg.hoist step volumes to the trace
+        before the typed error propagates."""
+        if not obs.TRACER.enabled:
+            return
+        from repro.runtime.report import step_volumes
+
+        v = step_volumes(compiled, step)
+        vols = {}
+        if v is not None:
+            vols = {f: getattr(v, f, 0) for f in
+                    ("modup_count", "moddown_count", "ip_count",
+                     "keyswitch_count", "relin_count", "evk_set_words",
+                     "comm_up_words", "comm_down_words")}
+        obs.event("exec.validate_failure",
+                  step=type(step).__name__, out=step.out,
+                  level=step.level, error=type(err).__name__,
+                  detail=str(err), **vols)
 
     # ------------------------- hoisted steps ---------------------------
     def _exec_hoisted(self, compiled, step: HoistedStep, values, digits,

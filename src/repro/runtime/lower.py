@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro import obs
 from repro.dfg.fusion import optimal_fusion
 from repro.dfg.graph import OpKind
 from repro.dfg.pkb import PKB, identify_pkbs
@@ -511,15 +512,19 @@ def lower_program(tc: TraceContext, fusion: bool = False,
     params = tc.params
     dfg = tc.g
     nh = params.num_slots
-    pkbs = sorted(identify_pkbs(dfg), key=lambda p: p.layer)
+    with obs.span("compile.identify_pkbs", nodes=len(dfg.nodes)) as sp:
+        pkbs = sorted(identify_pkbs(dfg), key=lambda p: p.layer)
+        sp.set_attrs(n_pkbs=len(pkbs))
     plan = None
     if fusion and pkbs:
-        plan = optimal_fusion(
-            pkbs, params.k, params.alpha, nh,
-            capacity_words=(capacity_words if capacity_words is not None
-                            else float("inf")),
-            max_group=max_group,
-        )
+        with obs.span("compile.fusion", n_pkbs=len(pkbs),
+                      max_group=max_group):
+            plan = optimal_fusion(
+                pkbs, params.k, params.alpha, nh,
+                capacity_words=(capacity_words if capacity_words is not None
+                                else float("inf")),
+                max_group=max_group,
+            )
         groups = plan.groups
     else:
         groups = [[i] for i in range(len(pkbs))]

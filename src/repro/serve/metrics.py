@@ -19,10 +19,17 @@ import dataclasses
 import math
 
 
-def percentile(values: list[float], p: float) -> float:
-    """Nearest-rank percentile; 0 on an empty sample."""
+def percentile(values: list[float], p: float) -> float | None:
+    """Nearest-rank percentile: ``sorted[max(1, ceil(p/100 * n)) - 1]``.
+
+    ``None`` on an empty sample — a percentile of nothing is not 0.0
+    (0.0 reads as "zero latency" in dashboards and summaries).  A
+    single-sample list returns that sample for every p: ceil clamps the
+    rank into [1, n] from below via ``max`` and from above via ``min``,
+    so no p in (0, 100] can index off either end.
+    """
     if not values:
-        return 0.0
+        return None
     s = sorted(values)
     rank = max(1, math.ceil(p / 100.0 * len(s)))
     return s[min(rank, len(s)) - 1]
@@ -93,11 +100,11 @@ class ServingReport:
         return self.completed / self.span_s if self.span_s else 0.0
 
     @property
-    def p50_latency_s(self) -> float:
+    def p50_latency_s(self) -> float | None:
         return percentile(self.latencies_s, 50)
 
     @property
-    def p99_latency_s(self) -> float:
+    def p99_latency_s(self) -> float | None:
         return percentile(self.latencies_s, 99)
 
     @property

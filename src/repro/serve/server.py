@@ -51,6 +51,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
+from repro import obs
 from repro.core.ckks import CKKSContext, Ciphertext
 from repro.errors import (
     CiphertextError, InvalidRequestError, ReproError, is_retryable,
@@ -129,6 +130,23 @@ class FHEServer:
         self.outcomes: dict[int, str] = {}   # rid -> terminal outcome
         self._dispatch_idx = 0               # fault-plan index
         self._ewma_service_s: float | None = None
+        # ---- observability (obs-gated; empty when tracing is off) ------
+        # request_log: per-request lifecycle rows on the VIRTUAL clock,
+        # rendered as per-tenant Perfetto lanes by obs.export.
+        self.request_log: list[dict] = []
+        self._first_dispatch: dict[int, float] = {}  # rid -> virtual t0
+
+    def _log_terminal(self, req: Request, end_s: float,
+                      outcome: str) -> None:
+        """obs-gated request-lifecycle row (virtual clock)."""
+        self.request_log.append({
+            "rid": req.rid, "tenant": req.tenant,
+            "program": req.program_id, "arrival_s": req.arrival,
+            "start_s": self._first_dispatch.get(req.rid),
+            "end_s": end_s, "outcome": outcome,
+        })
+        obs.event("serve.request", rid=req.rid, tenant=req.tenant,
+                  outcome=outcome)
 
     # ------------------------- programs --------------------------------
     def register_program(self, program_id: str,
@@ -197,28 +215,41 @@ class FHEServer:
                                deadline=deadline, validate=validate)
         if req is None:
             self._stats(tenant).rejected += 1
+            obs.event("serve.reject", tenant=tenant, program=program_id,
+                      depth=self.queue.depth)
             return False
+        obs.event("serve.submit", rid=req.rid, tenant=tenant,
+                  program=program_id, arrival=arrival)
         return True
 
     # ------------------------- outcomes --------------------------------
     def _shed_unqueued(self, tenant: str, reason: str) -> None:
         self._stats(tenant).shed += 1
         self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+        obs.event("serve.shed", tenant=tenant, reason=reason, queued=False)
 
-    def _shed(self, reqs: list[Request], reason: str) -> None:
+    def _shed(self, reqs: list[Request], reason: str,
+              now: float | None = None) -> None:
         self.shed_reasons[reason] = (self.shed_reasons.get(reason, 0)
                                      + len(reqs))
+        tracing = obs.TRACER.enabled
         for r in reqs:
             self._stats(r.tenant).shed += 1
             self.outcomes[r.rid] = f"shed:{reason}"
+            if tracing:
+                self._log_terminal(r, now if now is not None
+                                   else r.arrival, f"shed:{reason}")
 
     def _fail(self, reqs: list[Request], err: ReproError,
               now: float) -> None:
         name = type(err).__name__
         self.errors[name] = self.errors.get(name, 0) + len(reqs)
+        tracing = obs.TRACER.enabled
         for r in reqs:
             self._stats(r.tenant).failed += 1
             self.outcomes[r.rid] = f"failed:{name}"
+            if tracing:
+                self._log_terminal(r, now, f"failed:{name}")
         if self.breaker is not None and reqs:
             self.breaker.record_failure(reqs[0].tenant, now)
 
@@ -247,6 +278,16 @@ class FHEServer:
         idx = self._dispatch_idx
         self._dispatch_idx += 1
         err, res, hit = None, None, False
+        if obs.TRACER.enabled:
+            for r in reqs:
+                self._first_dispatch.setdefault(r.rid, now)
+            sp = obs.span("serve.dispatch", tenant=tenant,
+                          program=program_id, n_real=len(reqs), batch=B,
+                          attempt=attempt, virtual_start_s=now,
+                          rids=[r.rid for r in reqs])
+        else:
+            sp = obs.NULL_SPAN
+        sp.__enter__()
         t0 = time.perf_counter()
         try:
             if self.strict_plans:
@@ -268,6 +309,9 @@ class FHEServer:
         except ReproError as e:
             err = e
         dt = time.perf_counter() - t0
+        sp.set_attrs(plan_hit=hit, ok=err is None,
+                     error=type(err).__name__ if err is not None else None)
+        sp.__exit__(None, None, None)
         if self.faults is not None:
             dt += self.faults.extra_latency(idx)
             if err is None and res is not None:
@@ -309,9 +353,12 @@ class FHEServer:
             if self.keep_outputs:
                 self.outputs[r.rid] = outs
             ok.append(r)
+        tracing = obs.TRACER.enabled
         for r in ok:
             self._stats(r.tenant).record(now - r.arrival)
             self.outcomes[r.rid] = "completed"
+            if tracing:
+                self._log_terminal(r, now, "completed")
         if ok and self.breaker is not None:
             self.breaker.record_success(tenant)
 
@@ -336,6 +383,11 @@ class FHEServer:
                 now += backoff
                 self.retries += 1
                 attempt += 1
+                obs.event("serve.retry", tenant=tenant,
+                          program=program_id, attempt=attempt,
+                          backoff_s=backoff,
+                          error=type(err).__name__,
+                          rids=[r.rid for r in reqs])
                 continue
             # Permanent error (or retries exhausted).  A poisoned
             # ciphertext in a shared batch must not fail its co-batched
@@ -345,6 +397,9 @@ class FHEServer:
                     and len(reqs) > 1:
                 self.quarantine_splits += 1
                 mid = len(reqs) // 2
+                obs.event("serve.quarantine_split",
+                          error=type(err).__name__,
+                          rids=[r.rid for r in reqs], mid=mid)
                 now = self._serve_requests(reqs[:mid], tenant,
                                            program_id, now, width)
                 now = self._serve_requests(reqs[mid:], tenant,
@@ -359,7 +414,7 @@ class FHEServer:
         breaker gate -> deadline shed -> dispatch with recovery."""
         if self.breaker is not None \
                 and not self.breaker.allow(batch.tenant, now):
-            self._shed(batch.requests, "breaker_open")
+            self._shed(batch.requests, "breaker_open", now)
             return now
         live: list[Request] = []
         expired: list[Request] = []
@@ -367,7 +422,7 @@ class FHEServer:
             (expired if r.deadline is not None and now > r.deadline
              else live).append(r)
         if expired:
-            self._shed(expired, "deadline")
+            self._shed(expired, "deadline", now)
         if not live:
             return now
         return self._serve_requests(live, batch.tenant,

@@ -36,11 +36,14 @@ from repro.sim.schedule import ENGINES
 
 
 def replay_on_hardware(records, programs: dict[str, CompiledProgram],
-                       hw: HWConfig) -> dict:
+                       hw: HWConfig, with_result: bool = False):
     """Simulate a serving run's batch log on the HE^2 hardware model.
 
     ``records``: the server's ``BatchRecord`` list (launch order);
     ``programs``: program_id -> compiled program (the server's table).
+    ``with_result=True`` returns ``(summary, SimResult)`` so callers can
+    reach the pipelined run's engine timelines — the stall-budget gate
+    and the Perfetto exporter (``repro.obs``) both consume them.
     """
     ordered = sorted(records, key=lambda r: r.start_s)
     packed = []
@@ -67,7 +70,7 @@ def replay_on_hardware(records, programs: dict[str, CompiledProgram],
         one = simulate_blocks(blocks, hw, name="serving-serial",
                               mode="pipelined")
         serial_s += one.latency_s * rec.n_real
-    return {
+    summary = {
         "hw": hw.name,
         "batches": len(ordered),
         "requests": n_requests,
@@ -79,4 +82,9 @@ def replay_on_hardware(records, programs: dict[str, CompiledProgram],
                            if pipe.latency_s else 0.0),
         "utilization": {e: pipe.engine_util(e) for e in ENGINES},
         "energy_j": pipe.energy_j,
+        "comm_stall_s": pipe.comm_stall_s,
+        "comm_stall_frac": pipe.comm_stall_frac,
     }
+    if with_result:
+        return summary, pipe
+    return summary

@@ -52,6 +52,9 @@ class SimResult:
     # {engine: [(start_s, end_s, label), ...]} and busy seconds
     timelines: dict = dataclasses.field(default_factory=dict, repr=False)
     engine_busy_s: dict = dataclasses.field(default_factory=dict)
+    # pipelined extra: Schedule.energy_breakdown(hw) — per-engine joules
+    # (obs.registry.publish_energy mirrors this into the metrics registry)
+    energy_by_engine: dict = dataclasses.field(default_factory=dict)
 
     @property
     def edp(self) -> float:           # J*ms
@@ -195,7 +198,8 @@ def simulate_blocks(blocks: list[Block], hw: HWConfig, name: str,
         res.timelines = sched.timelines()
         res.engine_busy_s = {e: sched.busy(e) for e in ENGINES}
         # energy integrated over the placed per-engine busy intervals
-        res.energy_j = sched.energy_j(hw)
+        res.energy_by_engine = sched.energy_breakdown(hw)
+        res.energy_j = sum(res.energy_by_engine.values())
         return res
     link_bytes = (res.volumes.comm_words + res.volumes.evk_load_words) \
         * WORD_BYTES

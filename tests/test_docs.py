@@ -1,7 +1,7 @@
 """Docs integrity: links and module references resolve.
 
-Three checks over ``docs/ARCHITECTURE.md``, ``docs/SERVING.md`` and the
-README:
+Three checks over ``docs/ARCHITECTURE.md``, ``docs/SERVING.md``,
+``docs/OBSERVABILITY.md`` and the README:
   * every relative markdown link target exists on disk (anchors and
     external http(s) links are skipped);
   * every backticked repo path (``src/...``, ``benchmarks/...``,
@@ -19,6 +19,7 @@ import pytest
 REPO = pathlib.Path(__file__).resolve().parent.parent
 ARCH = REPO / "docs" / "ARCHITECTURE.md"
 SERVING = REPO / "docs" / "SERVING.md"
+OBS = REPO / "docs" / "OBSERVABILITY.md"
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
 PATH_RE = re.compile(r"`((?:src|benchmarks|tests|docs|examples)/[^`*?]+)`")
@@ -40,8 +41,20 @@ def test_serving_doc_exists():
         assert section in text
 
 
+def test_observability_doc_exists():
+    assert OBS.is_file(), "docs/OBSERVABILITY.md is part of the deal"
+    text = OBS.read_text()
+    for section in ("Quick start", "What is instrumented",
+                    "Metrics registry", "communication-stall budget",
+                    "Perfetto export anatomy", "Guarantees"):
+        assert section in text
+    # the calibration story must keep the paper figure visible
+    assert "6.67%" in text and "ui.perfetto.dev" in text
+
+
 @pytest.mark.parametrize(
-    "doc", ["docs/ARCHITECTURE.md", "docs/SERVING.md", "README.md"])
+    "doc", ["docs/ARCHITECTURE.md", "docs/SERVING.md",
+            "docs/OBSERVABILITY.md", "README.md"])
 def test_doc_relative_links_resolve(doc):
     path = REPO / doc
     assert path.is_file()
@@ -55,7 +68,7 @@ def test_doc_relative_links_resolve(doc):
     assert not bad, f"{doc}: dead relative links: {bad}"
 
 
-@pytest.mark.parametrize("doc", [ARCH, SERVING])
+@pytest.mark.parametrize("doc", [ARCH, SERVING, OBS])
 def test_doc_module_paths_resolve(doc):
     bad = []
     for ref in PATH_RE.findall(doc.read_text()):
@@ -64,11 +77,12 @@ def test_doc_module_paths_resolve(doc):
     assert not bad, f"{doc.name}: stale module references: {bad}"
 
 
-def test_serving_dotted_modules_import():
+@pytest.mark.parametrize("doc", [SERVING, OBS])
+def test_doc_dotted_modules_import(doc):
     bad = []
-    for mod in sorted(set(MODULE_RE.findall(SERVING.read_text()))):
+    for mod in sorted(set(MODULE_RE.findall(doc.read_text()))):
         try:
             importlib.import_module(mod)
         except ImportError:
             bad.append(mod)
-    assert not bad, f"SERVING.md names unimportable modules: {bad}"
+    assert not bad, f"{doc.name} names unimportable modules: {bad}"

@@ -1,0 +1,388 @@
+"""Observability layer (``repro.obs``): tracer, registry, budget, export.
+
+Covers the ISSUE-8 acceptance points:
+  * nested span ordering + structured attribute/event propagation,
+    including across ``run_batched`` vmap dispatch
+  * disabled-by-default: instrumented code adds ZERO jit retraces with
+    tracing ON, and a disabled span call is a no-op singleton
+  * metrics registry reconciles exactly with ``OpCounters`` and
+    ``ServingReport.accounted``
+  * stall-budget interval math from first principles, and agreement
+    with the scheduler's own ``comm_stall_s`` on a real compiled plan
+  * Perfetto/Chrome-trace JSON schema validity for a combined
+    sim-timeline + real-span export
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import linear
+from repro.core.ckks import CKKSContext
+from repro.core.params import CKKSParams
+from repro.obs import budget as ob
+from repro.obs.export import PID_REAL, PID_SIM, write_trace
+from repro.obs.registry import MetricsRegistry
+from repro.obs.tracer import NULL_SPAN, Tracer
+from repro.runtime import ProgramExecutor, TraceContext, compile_program
+from repro.sim import HE2_SM
+
+N_DIAG, BS = 4, 2
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts and ends with the global tracer off and empty."""
+    obs.disable()
+    obs.TRACER.reset()
+    obs.METRICS.reset()
+    yield
+    obs.disable()
+    obs.TRACER.reset()
+    obs.METRICS.reset()
+
+
+@pytest.fixture(scope="module")
+def octx():
+    params = CKKSParams(logN=8, L=4, alpha=2, k=2, q_bits=29,
+                        scale_bits=29)
+    return CKKSContext(params, seed=17)
+
+
+@pytest.fixture(scope="module")
+def oprog(octx):
+    params = octx.params
+    rng = np.random.default_rng(5)
+    diags = {d: rng.normal(size=params.num_slots)
+             for d in range(N_DIAG)}
+    tc = TraceContext(params)
+    h = tc.input("x", level=params.L, scale=params.scale)
+    tc.output(linear.matvec_bsgs(tc, h, diags, bs=BS), "y")
+    return compile_program(tc)
+
+
+# ---------------------------------------------------------------- tracer
+
+def test_disabled_span_is_noop_singleton():
+    tr = Tracer()
+    s = tr.span("anything", k=1)
+    assert s is NULL_SPAN and not s
+    with s as inner:
+        inner.set_attrs(ignored=True)
+        inner.event("ignored")
+    tr.event("standalone")          # also a no-op while disabled
+    assert tr.spans() == [] and tr.instants == []
+
+
+def test_nested_span_ordering_and_attrs():
+    tr = Tracer()
+    tr.enable()
+    with tr.span("outer", job=7) as outer:
+        with tr.span("inner") as inner:
+            inner.set_attrs(step=1)
+            tr.event("tick", n=3)   # attaches to the CURRENT span
+        assert tr.current() is outer
+    done = tr.spans()
+    # children finish (and land) before their parents
+    assert [s.name for s in done] == ["inner", "outer"]
+    inner, outer = done
+    assert inner.parent_id == outer.span_id
+    assert outer.parent_id is None
+    assert outer.attrs == {"job": 7} and inner.attrs == {"step": 1}
+    assert [e[0] for e in inner.events] == ["tick"]
+    assert inner.events[0][2] == {"n": 3}
+    assert outer.start_ns <= inner.start_ns <= inner.end_ns <= outer.end_ns
+    # name filtering, including '*' prefix match
+    assert [s.name for s in tr.spans("inner")] == ["inner"]
+    assert len(tr.spans("out*")) == 1
+
+
+def test_span_records_exception_and_still_closes():
+    tr = Tracer()
+    tr.enable()
+    with pytest.raises(ValueError):
+        with tr.span("boom"):
+            raise ValueError("nope")
+    (s,) = tr.spans()
+    assert s.attrs["error"] == "ValueError"
+    assert s.end_ns is not None
+    assert tr.current() is None
+
+
+def test_thread_local_context_propagation():
+    tr = Tracer()
+    tr.enable()
+    seen = {}
+
+    def worker(tag):
+        with tr.span(f"w.{tag}") as w:
+            with tr.span(f"w.{tag}.child"):
+                pass
+            seen[tag] = w.span_id
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(3)]
+    with tr.span("main"):
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    by_name = {s.name: s for s in tr.spans()}
+    assert by_name["main"].parent_id is None
+    for i in range(3):
+        child = by_name[f"w.{i}.child"]
+        # a worker's child nests under ITS thread's span, never "main"
+        assert child.parent_id == seen[i]
+        assert child.thread == by_name[f"w.{i}"].thread
+        assert child.thread != by_name["main"].thread
+
+
+# -------------------------------------------------------------- registry
+
+def test_registry_families_and_exposition():
+    reg = MetricsRegistry()
+    c = reg.counter("req.total", help="requests")
+    c.inc(tenant="a")
+    c.inc(2, tenant="a")
+    c.inc(tenant="b")
+    assert c.value(tenant="a") == 3 and c.value(tenant="b") == 1
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(4)
+    g.set(7)                        # gauges overwrite
+    assert g.value() == 7 and g.value(missing="x") is None
+    h = reg.histogram("lat_s")
+    for v in (0.0005, 0.003, 0.003, 99.0):
+        h.observe(v)
+    assert h.count() == 4 and h.sum() == pytest.approx(99.0065)
+    (series,) = h.series().values()
+    assert series["overflow"] == 1  # 99.0 beyond the last bucket edge
+    # same name, different family -> hard error
+    with pytest.raises(TypeError):
+        reg.counter("depth")
+    snap = reg.snapshot()
+    assert snap["req.total"]["series"] == {"tenant=a": 3.0, "tenant=b": 1.0}
+    text = reg.to_text()
+    assert "# TYPE req.total counter" in text
+    assert "req.total{tenant=a} 3.0" in text
+    assert "lat_s_count 4" in text
+    json.loads(reg.to_json())       # exposition is valid JSON
+
+
+# ---------------------------------------------------------------- budget
+
+def test_interval_math_first_principles():
+    assert ob.merge_intervals([(3, 4), (0, 2), (1, 3)]) == [(0, 4)]
+    assert ob.subtract_intervals([(0, 10)], [(2, 4), (6, 7)]) == \
+        [(0, 2), (4, 6), (7, 10)]
+    assert ob.subtract_intervals([(0, 5)], [(0, 5)]) == []
+    assert ob.total([(0, 2), (1, 3), (10, 11)]) == pytest.approx(4.0)
+    # link busy 0..8; compute covers 0..3 and 5..6 -> stalls 3..5, 6..8
+    tl = {
+        "link": [(0.0, 8.0, "up")],
+        "xpu": [(0.0, 3.0, "ntt")],
+        "xmu": [(5.0, 6.0, "ip")],
+    }
+    assert ob.stall_intervals(tl) == [(3.0, 5.0), (6.0, 8.0)]
+    sb = ob.analyze(tl, latency_s=10.0, name="toy", budget=0.5)
+    assert sb.comm_stall_s == pytest.approx(4.0)
+    assert sb.fraction == pytest.approx(0.4)
+    assert sb.within and "toy" in sb.describe()
+    d = sb.as_dict()
+    assert d["comm_stall_frac"] == pytest.approx(0.4)
+    assert d["within_budget"] is True
+    with pytest.raises(RuntimeError):
+        ob.check(ob.analyze(tl, latency_s=10.0, budget=0.1))
+
+
+def test_budget_matches_scheduler_accounting(octx, oprog):
+    """analyze() on the scheduled timelines reproduces the scheduler's
+    own exposed-communication number exactly."""
+    ex = ProgramExecutor(octx)
+    ct = octx.encrypt(np.random.default_rng(0).normal(
+        size=octx.params.num_slots))
+    res = ex.run(oprog, {"x": ct}, with_report=True)
+    sched = res.report.scheduled_result(oprog, HE2_SM)
+    sb = ob.analyze(sched.timelines, latency_s=sched.latency_s)
+    assert sb.comm_stall_s == pytest.approx(sched.comm_stall_s, rel=1e-9)
+    assert sb.fraction == pytest.approx(sched.comm_stall_frac, rel=1e-9)
+
+
+# ----------------------------------------------- instrumented hot path
+
+def test_zero_retraces_and_step_attrs_with_obs_enabled(octx, oprog):
+    """Tracing ON adds no jit retraces, and executor spans carry the
+    per-step op-count deltas that reconcile with OpCounters."""
+    ex = ProgramExecutor(octx)
+    nh = octx.params.num_slots
+    rng = np.random.default_rng(1)
+    one = {"x": octx.encrypt(rng.normal(size=nh))}
+    two = {"x": [octx.encrypt(rng.normal(size=nh)) for _ in range(2)]}
+    ex.run(oprog, one)              # warm every jit plan untraced
+    ex.run_batched(oprog, two)
+    before = dict(octx.engine.trace_counts)
+
+    obs.enable()
+    snap = octx.counters.snapshot()
+    ex.run(oprog, one)
+    ex.run_batched(oprog, two)
+    obs.disable()
+    assert dict(octx.engine.trace_counts) == before, \
+        "observability added a jit retrace"
+
+    runs = obs.TRACER.spans("exec.run")
+    assert [s.attrs["batch"] for s in runs] == [0, 2]
+    steps = obs.TRACER.spans("exec.step.*")
+    assert steps and all(s.parent_id in {r.span_id for r in runs}
+                         for s in steps)
+    # attribute propagation across the vmap dispatch: batched hoisted
+    # steps count batch-times the single-shot ModUps
+    hoisted = obs.TRACER.spans("exec.step.HoistedStep")
+    single = [s for s in hoisted if s.attrs["batch"] == 0]
+    batched = [s for s in hoisted if s.attrs["batch"] == 2]
+    assert single and batched
+    assert sum(s.attrs["modup"] for s in batched) == \
+        2 * sum(s.attrs["modup"] for s in single)
+    # span-level deltas sum to the OpCounters delta for the whole pair
+    # (hoisted blocks AND eager giant-step rotations both carry ModUps)
+    d = octx.counters.delta(snap)
+    assert sum(s.attrs["modup"] for s in steps) == d.modup
+
+
+def test_metrics_reconcile_with_opcounters(octx, oprog):
+    ex = ProgramExecutor(octx)
+    ct = octx.encrypt(np.random.default_rng(2).normal(
+        size=octx.params.num_slots))
+    ex.run(oprog, {"x": ct})
+    obs.publish_counters(obs.METRICS, octx.counters)
+    snap = obs.METRICS.snapshot()
+    for field, value in octx.counters.as_dict().items():
+        assert snap[f"fhe.{field}"]["series"][""] == value
+
+
+def test_serving_spans_and_accounting_reconcile(octx, oprog):
+    """A traced serving run: per-request terminal outcomes land in the
+    request log, dispatch spans exist, and the published registry view
+    reconciles with ServingReport.accounted."""
+    from repro.serve import Arrival, FHEServer
+
+    server = FHEServer(octx, max_batch=2, max_wait_s=0.0)
+    server.register_program("p", oprog)
+    nh = octx.params.num_slots
+    with server.registry.lease("warm"):
+        ct0 = octx.encrypt(np.zeros(nh))
+    server.warmup("warm", "p", {"x": ct0})
+
+    rng = np.random.default_rng(3)
+
+    def inputs_for(a):
+        return {"x": octx.encrypt(rng.normal(size=nh))}
+
+    trace = [Arrival(0.0, t, "p") for t in ("a", "b", "a", "b")]
+    obs.enable()
+    rep = server.run_trace(trace, inputs_for)
+    obs.disable()
+    assert rep.completed == 4
+
+    assert len(server.request_log) == 4
+    assert {r["outcome"] for r in server.request_log} == {"completed"}
+    assert sorted(r["rid"] for r in server.request_log) == [0, 1, 2, 3]
+    for r in server.request_log:
+        assert r["arrival_s"] <= r["start_s"] <= r["end_s"]
+    dispatches = obs.TRACER.spans("serve.dispatch")
+    assert dispatches and all(s.attrs["ok"] for s in dispatches)
+    assert sum(len(s.attrs["rids"]) for s in dispatches) == 4
+
+    obs.publish_serving(obs.METRICS, rep)
+    snap = obs.METRICS.snapshot()
+    assert snap["serving.accounted"]["series"][""] == rep.accounted
+    assert snap["serving.completed"]["series"][""] == rep.completed
+    assert snap["serving.latency_s"]["series"][""]["count"] == 4
+
+
+# ---------------------------------------------------------------- export
+
+def test_perfetto_trace_schema(tmp_path, octx, oprog):
+    """A combined export (real spans + virtual schedule) is valid
+    Chrome Trace Event JSON with both clock domains present."""
+    ex = ProgramExecutor(octx)
+    ct = octx.encrypt(np.random.default_rng(4).normal(
+        size=octx.params.num_slots))
+    res = ex.run(oprog, {"x": ct}, with_report=True)
+    sched = res.report.scheduled_result(oprog, HE2_SM)
+    obs.enable()
+    with obs.span("smoke", kind="test"):
+        ex.run(oprog, {"x": ct})
+    obs.disable()
+
+    path = tmp_path / "trace.json"
+    write_trace(str(path), tracer=obs.TRACER, timelines=sched.timelines)
+    doc = json.loads(path.read_text())
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+
+    by_ph = {}
+    for ev in doc["traceEvents"]:
+        assert {"ph", "pid", "tid", "name"} <= set(ev)
+        by_ph.setdefault(ev["ph"], []).append(ev)
+        if ev["ph"] == "X":
+            assert ev["ts"] >= 0 and ev["dur"] >= 0
+    assert set(by_ph) <= {"X", "M", "i"}
+
+    procs = {ev["pid"]: ev["args"]["name"] for ev in by_ph["M"]
+             if ev["name"] == "process_name"}
+    assert PID_SIM in procs and PID_REAL in procs
+
+    lanes = {ev["args"]["name"] for ev in by_ph["M"]
+             if ev["name"] == "thread_name" and ev["pid"] == PID_SIM}
+    assert {"xpu", "xmu", "link", "evk"} <= lanes
+    assert "stall (comm exposed)" in lanes
+
+    # the stall lane's slices total the budget module's stall time
+    stall_us = sum(ev["dur"] for ev in by_ph["X"]
+                   if ev["pid"] == PID_SIM and ev["name"] == "comm-stall")
+    assert stall_us / 1e6 == pytest.approx(sched.comm_stall_s, rel=1e-6)
+
+    # real spans nest: exec.step slices sit inside the exec.run window
+    real = [ev for ev in by_ph["X"] if ev["pid"] == PID_REAL]
+    run = next(ev for ev in real if ev["name"] == "exec.run")
+    for ev in real:
+        if ev["name"].startswith("exec.step."):
+            assert ev["ts"] >= run["ts"]
+            assert ev["ts"] + ev["dur"] <= run["ts"] + run["dur"] + 1e-3
+            assert ev["args"]["parent_span"] == run["args"]["span_id"]
+
+
+def test_validate_failure_emits_span_event(octx, oprog, monkeypatch):
+    """A ``validate=True`` block-boundary failure emits a span event
+    carrying the failing block's step volumes before the typed error
+    propagates."""
+    from repro.errors import ScaleDriftError
+
+    ex = ProgramExecutor(octx)
+    ct = octx.encrypt(np.random.default_rng(6).normal(
+        size=octx.params.num_slots))
+    ex.run(oprog, {"x": ct}, validate=True)  # healthy run passes
+
+    def poisoned(ct, where=""):
+        # only the keyswitch block-boundary check trips (the input
+        # check runs first and would short-circuit the block path)
+        if "Step" in where:
+            raise ScaleDriftError(f"injected drift {where}", scale=-1.0)
+
+    monkeypatch.setattr(octx, "check_ciphertext", poisoned)
+    obs.enable()
+    with pytest.raises(ScaleDriftError):
+        ex.run(oprog, {"x": ct}, validate=True)
+    obs.disable()
+    events = [e for s in obs.TRACER.spans()
+              for e in s.events if e[0] == "exec.validate_failure"]
+    events += [(n, ts, a) for n, ts, _t, a in obs.TRACER.instants
+               if n == "exec.validate_failure"]
+    assert events, "validation failure did not emit a span event"
+    _, _, attrs = events[0]
+    assert attrs["error"] == "ScaleDriftError"
+    assert "modup_count" in attrs and "comm_up_words" in attrs
+    assert attrs["step"] and "out" in attrs

@@ -177,7 +177,33 @@ def test_metrics_arithmetic():
     assert percentile(lats, 99) == pytest.approx(1.0)
     assert percentile(lats, 100) == pytest.approx(1.0)
     assert percentile([0.7], 50) == pytest.approx(0.7)
-    assert percentile([], 99) == 0.0
+    # empty sample: None, not a fake 0.0 latency
+    assert percentile([], 99) is None
+    assert percentile([], 50) is None
+
+    # rank arithmetic at the boundary sizes (nearest-rank definition:
+    # sorted[max(1, ceil(p/100 * n)) - 1], clamped into [1, n])
+    # n=1: every p returns the sample
+    for p in (0.1, 1, 50, 99, 100):
+        assert percentile([0.7], p) == pytest.approx(0.7)
+    # n=2: p<=50 -> first, p>50 -> second
+    two = [1.0, 2.0]
+    assert percentile(two, 1) == pytest.approx(1.0)
+    assert percentile(two, 50) == pytest.approx(1.0)
+    assert percentile(two, 51) == pytest.approx(2.0)
+    assert percentile(two, 99) == pytest.approx(2.0)
+    assert percentile(two, 100) == pytest.approx(2.0)
+    # n=100: rank p exactly (identity on 1..100), p99 is the 99th value
+    hundred = [float(k) for k in range(1, 101)]
+    assert percentile(hundred, 1) == pytest.approx(1.0)
+    assert percentile(hundred, 50) == pytest.approx(50.0)
+    assert percentile(hundred, 99) == pytest.approx(99.0)
+    assert percentile(hundred, 100) == pytest.approx(100.0)
+    # empty-tenant snapshot: percentile fields are None, not 0.0
+    empty = TenantStats().summary(span_s=1.0)
+    assert empty["p50_latency_s"] is None
+    assert empty["p99_latency_s"] is None
+    assert empty["completed"] == 0
 
     st = TenantStats()
     for v in lats:
