@@ -1,0 +1,190 @@
+"""Encrypted-inference workload benchmark: real applications (packed
+logistic regression, small MLPs) eager vs compiled through
+``repro.workloads``.
+
+Per workload, the same model runs three ways:
+
+  eager      — ``WorkloadProgram.run_eager``: the committed plan
+               replayed op by op on the ``CKKSContext``
+  compiled   — ``compile_workload`` (fusion off, exact): every segment
+               lowered through ``lower_program``, executed batched via
+               ``ProgramExecutor.run_batched``; bit-exact with eager
+  fused      — ``compile_workload(fusion=True)``: HERO PKB fusion on,
+               numerically equivalent, fewest ModUps (shallow
+               workloads only — the bootstrap-inserted chain stays on
+               the exact lowering)
+
+The bootstrap-insertion workload (``mlp_boot``) compiles with
+``input_level=7`` — a forced level exhaustion the planner must resolve
+by splicing a ``Bootstrapper.compile`` program between the layers.
+
+Writes BENCH_workloads.json (ModUp/ModDown counts, measured wall
+latency, scheduled HE2-SM latency/energy per workload) and ENFORCES
+the regression gates per workload:
+
+  * compiled bit-exact with eager (fusion=False contract)
+  * compiled ModUps strictly below eager ModUps
+  * decrypt accuracy within the model's tolerance of the
+    ``matvec_plain``+numpy reference (compiled AND fused runs)
+  * exact predicted-vs-executed reconciliation per segment
+  * the insertion workload splices >= 1 bootstrap segment
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def _ct_eq(a, b) -> bool:
+    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
+            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+
+
+def run() -> list[str]:
+    from repro.core.bootstrap import Bootstrapper
+    from repro.core.ckks import CKKSContext
+    from repro.core.params import CKKSParams
+    from repro.sim import HE2_SM
+    from repro.workloads import (
+        WorkloadExecutor, compile_workload, logreg, mlp, mlp_bootstrap,
+        scheduled_result,
+    )
+
+    RESULTS.mkdir(exist_ok=True)
+    rng = np.random.default_rng(common.SEED)
+
+    # shallow 14-level chain for the plain inference workloads
+    p_wl = CKKSParams(logN=8, L=14, alpha=2, k=3, q_bits=29,
+                      scale_bits=29)
+    ctx_wl = CKKSContext(p_wl, seed=7 + common.SEED)
+    nh = p_wl.num_slots
+
+    # deep bootstrap-capable chain for the insertion workload (the
+    # bench_bootstrap smoke shape)
+    common.log("workloads: building bootstrap-capable context")
+    p_bt = CKKSParams(logN=8, L=19, alpha=4, k=4, q_bits=29,
+                      scale_bits=29, q0_bits=30)
+    ctx_bt = CKKSContext(p_bt, seed=7 + common.SEED, hamming_weight=8)
+    btp = Bootstrapper(ctx_bt, n_groups=2, mod_K=3, cheb_degree=27)
+
+    # (name, ctx, model, btp, input_level, batch, fused config too?)
+    cases = [("logreg", ctx_wl, logreg(nh, bs=4), None, 9, 2, True)]
+    if not common.SMOKE:
+        cases.append(("mlp", ctx_wl, mlp(nh, bs=4), None, None, 2, True))
+    cases.append(("mlp_boot", ctx_bt, mlp_bootstrap(nh, bs=4), btp, 7,
+                  1, False))
+
+    records: dict = {}
+    gates: dict = {}
+    lines: list[str] = []
+    for name, ctx, m, btp_i, in_level, batch, with_fused in cases:
+        common.log(f"workloads: {name}: compiling")
+        wp = compile_workload(m, ctx.params, btp=btp_i,
+                              input_level=in_level)
+        xs = [m.sample(rng) for _ in range(batch)]
+        cts = [ctx.encrypt(x, level=in_level) if in_level is not None
+               else ctx.encrypt(x) for x in xs]
+        c = ctx.counters
+
+        common.log(f"workloads: {name}: eager replay x{batch}")
+        t0, s0 = time.perf_counter(), c.snapshot()
+        exps = [wp.run_eager(ctx, ct, btp=btp_i) for ct in cts]
+        d_eager = c.delta(s0)
+        t_eager = (time.perf_counter() - t0) / batch
+
+        common.log(f"workloads: {name}: compiled batched run")
+        ex = WorkloadExecutor(ctx)
+        t0, s1 = time.perf_counter(), c.snapshot()
+        res = ex.run_batched(wp, cts, with_report=True)
+        d_comp = c.delta(s1)
+        t_comp = (time.perf_counter() - t0) / batch
+
+        bitexact = all(_ct_eq(g, e) for g, e in zip(res.output, exps))
+        errs = [float(np.abs(ctx.decrypt(o).real - m.reference(x)).max())
+                for x, o in zip(xs, res.output)]
+        rec = res.reconcile()
+        sched = scheduled_result(wp, HE2_SM, batch=batch)
+
+        rec_f = None
+        if with_fused:
+            common.log(f"workloads: {name}: fused run")
+            fused = compile_workload(m, ctx.params, btp=btp_i,
+                                     input_level=in_level, fusion=True)
+            s2 = c.snapshot()
+            res_f = ex.run_batched(fused, cts)
+            d_fused = c.delta(s2)
+            err_f = max(
+                float(np.abs(ctx.decrypt(o).real - m.reference(x)).max())
+                for x, o in zip(xs, res_f.output))
+            rec_f = {"modup": d_fused.modup, "moddown": d_fused.moddown,
+                     "decrypt_err": err_f,
+                     "predicted_modups": fused.predicted_modups()}
+            gates[f"{name}_fused_modups"] = (
+                d_fused.modup <= d_comp.modup,
+                f"fused {d_fused.modup} !<= compiled {d_comp.modup}")
+            gates[f"{name}_fused_accuracy"] = (
+                err_f < m.tolerance,
+                f"fused decrypt err {err_f:.2e} !< tol {m.tolerance}")
+
+        records[name] = {
+            "layers": [s["stage"] for s in wp.plan.table],
+            "n_segments": len(wp.segments),
+            "n_bootstraps": wp.n_bootstraps,
+            "input_level": wp.input_level,
+            "output_level": wp.output_level,
+            "batch": batch,
+            "modups": {"eager": d_eager.modup, "compiled": d_comp.modup},
+            "moddowns": {"eager": d_eager.moddown,
+                         "compiled": d_comp.moddown},
+            "predicted_modups": wp.predicted_modups(),
+            "bitexact_compiled_vs_eager": bitexact,
+            "decrypt_err": max(errs),
+            "tolerance": m.tolerance,
+            "reconciled": rec["counts_match"],
+            "wall_s_per_ct": {"eager": t_eager, "compiled": t_comp},
+            "scheduled_he2_sm_latency_ms": sched.latency_s * 1e3,
+            "scheduled_he2_sm_energy_mj": sched.energy_j * 1e3,
+            "fused": rec_f,
+        }
+        gates[f"{name}_bitexact"] = (
+            bitexact, "compiled workload is not bit-exact with eager")
+        gates[f"{name}_modups"] = (
+            d_comp.modup < d_eager.modup,
+            f"compiled {d_comp.modup} !< eager {d_eager.modup}")
+        gates[f"{name}_accuracy"] = (
+            max(errs) < m.tolerance,
+            f"decrypt err {max(errs):.2e} !< tol {m.tolerance}")
+        gates[f"{name}_reconcile"] = (
+            rec["counts_match"], "op counts did not reconcile")
+        lines.append(
+            f"workloads/{name},{t_comp * 1e6:.0f},"
+            f"modups={d_comp.modup}/{d_eager.modup};"
+            f"err={max(errs):.1e};boots={wp.n_bootstraps}")
+
+    gates["insertion"] = (
+        records["mlp_boot"]["n_bootstraps"] >= 1,
+        "planner spliced no bootstrap at the forced level exhaustion")
+
+    summary = {
+        "params": {"shallow": {"logN": p_wl.logN, "L": p_wl.L},
+                   "deep": {"logN": p_bt.logN, "L": p_bt.L}},
+        "workloads": records,
+        "gate": {
+            "results": {k: ok for k, (ok, _) in gates.items()},
+            "passed": all(ok for ok, _ in gates.values()),
+        },
+    }
+    (RESULTS / "BENCH_workloads.json").write_text(
+        json.dumps(summary, indent=2))
+
+    failures = [f"{k}: {msg}" for k, (ok, msg) in gates.items() if not ok]
+    if failures:
+        raise RuntimeError("workload gates failed: " + "; ".join(failures))
+    return lines

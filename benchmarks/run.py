@@ -32,8 +32,9 @@ import time
 def main() -> None:
     from benchmarks import (
         bench_bootstrap, bench_keyswitch, bench_runtime, bench_serving,
-        common, fig6_parallelism, fig7_bsgs, fig14_ablation, fig15_hero,
-        fig16_util, fig17_sensitivity, table1_ai, table4_end2end,
+        bench_workloads, common, fig6_parallelism, fig7_bsgs,
+        fig14_ablation, fig15_hero, fig16_util, fig17_sensitivity,
+        table1_ai, table4_end2end,
     )
 
     modules = {
@@ -42,6 +43,7 @@ def main() -> None:
         "keyswitch": bench_keyswitch,
         "runtime": bench_runtime,
         "bootstrap": bench_bootstrap,
+        "workloads": bench_workloads,
         "serving": bench_serving,
         "fig6": fig6_parallelism,
         "fig7": fig7_bsgs,

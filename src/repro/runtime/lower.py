@@ -448,19 +448,23 @@ def _lower_group(dfg, members: list[PKB], nh: int, pt_specs,
 
     Raises Unliftable only when nothing in the group lifts."""
     first, last = members[0], members[-1]
-    if len(first.in_anchors) == 1:
+    # in_anchors walks backward through commutative EWOs and may look
+    # THROUGH the value the rotations actually consume — either past a
+    # merge CAdd (the re/im merge feeding SlotToCoeff) or past a
+    # non-commutative EWO like the PADD closing a Chebyshev activation
+    # (whose _lift would fail even though the block hoists fine off the
+    # PADD output).  When every rotation reads the same direct
+    # argument, that argument IS the anchor; only when the arguments
+    # differ do we fall back to the walked anchor, and true
+    # multi-anchor blocks (BSGS giant steps) stay on the multi/eager
+    # path.
+    args = {dfg.nodes[r].args[0] for r in first.rotations}
+    if len(args) == 1:
+        anchor = next(iter(args))
+    elif len(first.in_anchors) == 1:
         anchor = next(iter(first.in_anchors))
     else:
-        # in_anchors walks backward through commutative EWOs and may
-        # look THROUGH the value the rotations actually consume (e.g.
-        # the re/im merge CAdd feeding SlotToCoeff).  When every
-        # rotation reads the same direct argument, that argument is the
-        # anchor; true multi-anchor blocks (BSGS giant steps) have
-        # differing arguments and stay on the multi/eager path.
-        args = {dfg.nodes[r].args[0] for r in first.rotations}
-        if len(args) != 1:
-            raise Unliftable("multi-anchor PKB")
-        anchor = next(iter(args))
+        raise Unliftable("multi-anchor PKB")
     anchor_level = dfg.nodes[anchor].limbs - 1
     allowed = set()
     for m in members:
@@ -500,6 +504,13 @@ def _lower_group(dfg, members: list[PKB], nh: int, pt_specs,
             continue
         if dfg.succs(nid) - consumed:
             terms, _ = _lift(dfg, nid, anchor, allowed, nh)
+            nz = {k: c for k, c in terms.items() if c != 0.0}
+            if len(nz) == 1 and not next(iter(nz))[1]:
+                # exactly ctx.rotate: the single-rotation hoisted
+                # trajectory rounds differently from the eager rotate
+                # the trace recorded, so re-materialize it eagerly
+                consumed.discard(nid)
+                continue
             steps[nid] = _build_step(dfg, nid, anchor, terms, pt_specs,
                                      exact_only, len(members),
                                      allow_bare=True)

@@ -44,4 +44,6 @@ from repro.serve.scheduler import (  # noqa: F401
 )
 from repro.serve.server import BatchRecord, FHEServer  # noqa: F401
 from repro.serve.simfeed import replay_on_hardware  # noqa: F401
-from repro.serve.workload import Arrival, poisson_trace  # noqa: F401
+from repro.serve.workload import (  # noqa: F401
+    Arrival, poisson_trace, workload_request_programs,
+)

@@ -23,6 +23,46 @@ import dataclasses
 import numpy as np
 
 
+def workload_request_programs(models, params, btp=None,
+                              input_level: int | None = None,
+                              fusion: bool = False, exact: bool = True):
+    """Compile inference workloads into servable request programs.
+
+    The server dispatches ONE :class:`~repro.runtime.CompiledProgram`
+    per request, so a single-segment workload (no bootstrap inserted)
+    maps 1:1 — its program id is the workload name and its tags are the
+    trace tags (``"x"`` in, ``"y"`` out).  A bootstrap-inserted
+    workload publishes one program per segment (``"name/0"``,
+    ``"name/1"``, ...); a client or gateway chains them by feeding each
+    segment's output into the next segment's input tag — the ids stay
+    stable so every hop still rides plan-cache admission.
+
+    Returns ``(programs, chains)``: ``programs`` maps program id to
+    CompiledProgram (feed to ``FHEServer.register_program``);
+    ``chains`` maps each workload name to its ordered hop list of
+    ``(program_id, in_tag, out_tag)``.
+    """
+    from repro.workloads import compile_workload
+
+    programs, chains = {}, {}
+    for model in models:
+        wp = compile_workload(model, params, btp=btp,
+                              input_level=input_level, fusion=fusion,
+                              exact=exact)
+        if len(wp.segments) == 1:
+            seg = wp.segments[0]
+            programs[model.name] = seg.compiled
+            chains[model.name] = [(model.name, seg.in_tag, seg.out_tag)]
+        else:
+            hops = []
+            for i, seg in enumerate(wp.segments):
+                pid = f"{model.name}/{i}"
+                programs[pid] = seg.compiled
+                hops.append((pid, seg.in_tag, seg.out_tag))
+            chains[model.name] = hops
+    return programs, chains
+
+
 @dataclasses.dataclass(frozen=True)
 class Arrival:
     """One open-loop arrival: WHO asks for WHAT and WHEN (seconds)."""

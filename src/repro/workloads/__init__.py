@@ -1,0 +1,39 @@
+"""Encrypted inference workloads through the compiled runtime.
+
+Real applications — packed logistic regression, small MLPs — traced
+through ``repro.runtime`` with automatic bootstrap insertion when the
+level budget runs out:
+
+* :mod:`repro.workloads.models` — diagonally-packed Dense layers with
+  Chebyshev polynomial activations; the same source runs eagerly or
+  traces.
+* :mod:`repro.workloads.insert` — the level-tracking planner that
+  probes stage spans symbolically and splices ``Bootstrapper.compile``
+  programs at the cheapest cut points.
+* :mod:`repro.workloads.pipeline` — multi-segment compilation
+  (``compile_workload``), chained batched execution
+  (``WorkloadExecutor``), eager replay, and the sim-timeline feed.
+
+Operator guide: ``docs/WORKLOADS.md``.
+"""
+from repro.workloads.insert import (
+    PlannedCut, SpanProbe, WorkloadPlan, plan_cuts, probe_bootstrap,
+    probe_span,
+)
+from repro.workloads.models import (
+    Activation, Dense, Workload, logreg, mlp, mlp_bootstrap,
+    scaled_tanh, sigmoid4,
+)
+from repro.workloads.pipeline import (
+    Segment, WorkloadExecutor, WorkloadProgram, WorkloadResult,
+    compile_workload, scheduled_result, workload_blocks,
+)
+
+__all__ = [
+    "Activation", "Dense", "Workload", "logreg", "mlp", "mlp_bootstrap",
+    "scaled_tanh", "sigmoid4",
+    "PlannedCut", "SpanProbe", "WorkloadPlan", "plan_cuts",
+    "probe_bootstrap", "probe_span",
+    "Segment", "WorkloadExecutor", "WorkloadProgram", "WorkloadResult",
+    "compile_workload", "scheduled_result", "workload_blocks",
+]

@@ -1,0 +1,195 @@
+"""Encrypted-inference model zoo: packed dense layers + polynomial acts.
+
+The paper's end-to-end claims (Table IV) rest on application workloads,
+not bootstrapping alone — this module defines the models those
+workloads run.  A :class:`Dense` layer is a diagonally-banded weight
+matrix evaluated with the BSGS matvec from :mod:`repro.core.linear`
+(baby-step PKB feeding a giant-step PKB, Eq. (3)), an optional bias
+added as a plaintext at the ciphertext's exact (level, scale), and an
+optional activation evaluated as a Chebyshev interpolant through
+:func:`repro.core.polyeval.eval_chebyshev_bsgs` (Paterson-Stockmeyer,
+O(sqrt d) CMults).  Because every op goes through the context's public
+API, the SAME layer code runs eagerly on a ``CKKSContext`` or traces
+through ``runtime.TraceContext`` — that symmetry is what makes the
+compiled-vs-eager bit-exactness gates of ``tests/test_workloads.py``
+possible.
+
+Magnitude discipline: activations are interpolated on [-1, 1], so
+weights are row-normalized to a configurable inf-norm ``gain`` and
+sample inputs are bounded; the bootstrap-shaped MLP additionally keeps
+every intermediate at |m| ~ 1e-2 because EvalMod's sine approximation
+is only linear near 0 (m/q0 must stay small — see
+``core/bootstrap.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core import linear
+from repro.core.polyeval import chebyshev_coeffs, eval_chebyshev_bsgs
+
+
+@dataclasses.dataclass(frozen=True)
+class Activation:
+    """A pointwise nonlinearity and its Chebyshev interpolant."""
+
+    name: str
+    fn: Callable[[np.ndarray], np.ndarray]
+    degree: int
+    coeffs: np.ndarray = dataclasses.field(repr=False, default=None)
+
+    def __post_init__(self):
+        if self.coeffs is None:
+            object.__setattr__(
+                self, "coeffs", chebyshev_coeffs(self.fn, self.degree))
+
+
+def sigmoid4(degree: int = 15) -> Activation:
+    """sigmoid(4t) on [-1, 1] — the logistic-regression link (HELR-style
+    rescaled argument so the transition is visible inside the
+    interpolation interval).  Chebyshev error: ~2e-3 at degree 7,
+    ~6e-6 at degree 15."""
+    return Activation("sigmoid4", lambda t: 1.0 / (1.0 + np.exp(-4.0 * t)),
+                      degree)
+
+
+def scaled_tanh(scale: float = 0.1, degree: int = 7) -> Activation:
+    """scale * tanh(t): an odd activation whose output magnitude stays
+    ~``scale`` — the bootstrap-friendly nonlinearity (post-activation
+    messages must sit in EvalMod's near-linear sine region)."""
+    return Activation(f"tanh*{scale:g}",
+                      lambda t, s=scale: s * np.tanh(t), degree)
+
+
+@dataclasses.dataclass
+class Dense:
+    """One packed dense layer: diagonal matvec -> +bias -> activation."""
+
+    name: str
+    A: np.ndarray                     # (nh, nh) real, diagonally banded
+    bias: np.ndarray | None = None    # (nh,) real
+    act: Activation | None = None
+    bs: int = 4                       # BSGS baby-step block size
+
+    def __post_init__(self):
+        self._diags = linear.matrix_diagonals(self.A)
+
+    @property
+    def diags(self) -> dict[int, np.ndarray]:
+        return self._diags
+
+    def apply(self, ctx, ct):
+        """Evaluate the layer on any context exposing the public op API
+        (eager ``CKKSContext`` or ``runtime.TraceContext``)."""
+        giants = {d // self.bs for d in self._diags}
+        if self.bs > 0 and len(giants) > 1:
+            out = linear.matvec_bsgs(ctx, ct, self._diags, bs=self.bs)
+        else:
+            out = linear.matvec_diag(ctx, ct, self._diags)
+        if self.bias is not None:
+            # pt_add keeps ct.scale and adds pt.m raw: the bias MUST be
+            # encoded at the ciphertext's exact (level, scale).
+            pt = ctx.encode(self.bias, level=out.level, scale=out.scale)
+            out = ctx.pt_add(out, pt)
+        if self.act is not None:
+            out = eval_chebyshev_bsgs(ctx, out, self.act.coeffs)
+        return out
+
+    def reference(self, x: np.ndarray) -> np.ndarray:
+        y = linear.matvec_plain(self.A, x)
+        if self.bias is not None:
+            y = y + self.bias
+        return self.act.fn(np.real(y)) if self.act is not None else y
+
+
+@dataclasses.dataclass
+class Workload:
+    """An encrypted-inference application: a stack of Dense layers plus
+    the plaintext reference and a seeded input sampler."""
+
+    name: str
+    layers: list[Dense]
+    input_mag: float = 1.0            # sample() magnitude bound
+    tolerance: float = 5e-3           # decrypt-accuracy floor (gated)
+
+    @property
+    def nh(self) -> int:
+        return self.layers[0].A.shape[0]
+
+    def apply(self, ctx, ct):
+        for layer in self.layers:
+            ct = layer.apply(ctx, ct)
+        return ct
+
+    def reference(self, x: np.ndarray) -> np.ndarray:
+        for layer in self.layers:
+            x = layer.reference(x)
+        return np.real(x)
+
+    def sample(self, rng: np.random.Generator) -> np.ndarray:
+        return rng.uniform(-1.0, 1.0, self.nh) * self.input_mag
+
+
+def _band_matrix(nh: int, offsets, rng: np.random.Generator,
+                 gain: float) -> np.ndarray:
+    """Random matrix supported on the given generalized diagonals,
+    row-normalized so the inf-norm is exactly ``gain`` (keeps matvec
+    outputs inside the activation's interpolation interval)."""
+    A = np.zeros((nh, nh))
+    for d in offsets:
+        vals = rng.uniform(-1.0, 1.0, nh)
+        idx = np.arange(nh)
+        A[idx, (idx + d) % nh] = vals
+    A *= gain / np.abs(A).sum(axis=1, keepdims=True)
+    return A
+
+
+def logreg(nh: int, seed: int = 0, degree: int = 15, n_diags: int = 8,
+           bs: int = 4, gain: float = 0.8) -> Workload:
+    """Packed logistic regression: one banded matvec + sigmoid(4t).
+
+    Level cost: 1 (matvec) + 8 (degree-15 Chebyshev) = 9 levels."""
+    rng = np.random.default_rng(seed)
+    A = _band_matrix(nh, range(n_diags), rng, gain)
+    b = rng.uniform(-0.1, 0.1, nh)
+    layer = Dense("logits", A, bias=b, act=sigmoid4(degree), bs=bs)
+    return Workload("logreg", [layer], input_mag=1.0, tolerance=5e-3)
+
+
+def mlp(nh: int, seed: int = 0, n_diags: int = 8, bs: int = 4,
+        gain: float = 0.8) -> Workload:
+    """Two dense layers with degree-7 sigmoid activations.  Level
+    cost: (1+6) + (1+6) = 14 levels (degree-7 Chebyshev error ~2e-3;
+    a degree-3 head would blow the 6e-3 decrypt floor at ~2e-2)."""
+    rng = np.random.default_rng(seed)
+    A1 = _band_matrix(nh, range(n_diags), rng, gain)
+    b1 = rng.uniform(-0.1, 0.1, nh)
+    A2 = _band_matrix(nh, range(n_diags), rng, gain)
+    b2 = rng.uniform(-0.1, 0.1, nh)
+    layers = [
+        Dense("hidden", A1, bias=b1, act=sigmoid4(degree=7), bs=bs),
+        Dense("head", A2, bias=b2, act=sigmoid4(degree=7), bs=bs),
+    ]
+    return Workload("mlp", layers, input_mag=1.0, tolerance=6e-3)
+
+
+def mlp_bootstrap(nh: int, seed: int = 0, n_diags: int = 8,
+                  bs: int = 4, gain: float = 0.8) -> Workload:
+    """The bootstrap-exercising MLP: magnitudes kept ~1e-2 so the
+    mid-pipeline bootstrap's EvalMod stays in its accurate region.
+
+    Layer 1 costs 1 + 6 = 7 levels (degree-7 scaled tanh); layer 2 is a
+    bias-free linear head (1 level).  Compiled with ``input_level=7``
+    the planner must splice a bootstrap between them."""
+    rng = np.random.default_rng(seed)
+    A1 = _band_matrix(nh, range(n_diags), rng, gain)
+    b1 = rng.uniform(-0.02, 0.02, nh)
+    A2 = _band_matrix(nh, range(n_diags), rng, gain)
+    layers = [
+        Dense("hidden", A1, bias=b1, act=scaled_tanh(0.1, degree=7), bs=bs),
+        Dense("head", A2, bias=None, act=None, bs=bs),
+    ]
+    return Workload("mlp_boot", layers, input_mag=0.3, tolerance=2e-2)

@@ -1,0 +1,75 @@
+"""Shared parity helpers for the compiled-runtime test pyramid.
+
+Every runtime test asserts the same sandwich: execute a
+``CompiledProgram``, compare with the eager replay bit for bit, and
+optionally check that the op counters moved the right way and that the
+execution report reconciles exactly.  This module is that sandwich,
+written once — ``test_runtime.py``, ``test_runtime_bootstrap.py``,
+``test_relin.py``, ``test_workloads.py`` and the property suite all
+import it.  (tests/ has no ``__init__.py``; pytest's rootdir prepend
+makes ``from parity import ...`` work from any sibling test file.)
+"""
+import numpy as np
+
+from repro.runtime import ProgramExecutor
+
+
+def ct_equal(a, b):
+    """Bit-exact ciphertext comparison: both polynomial components."""
+    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
+            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+
+
+def assert_ct_equal(got, exp, what="compiled output"):
+    """Bit-exactness plus the metadata the bitstream can't carry."""
+    assert got.level == exp.level, (what, got.level, exp.level)
+    assert got.scale == exp.scale, (what, got.scale, exp.scale)
+    assert ct_equal(got, exp), f"{what}: bitstreams differ"
+
+
+def assert_program_parity(ctx, program, feeds, eager_fn, out="y",
+                          batched=False, exact=True, fewer_modups=False,
+                          reconcile=False, rel_tol=1e-3):
+    """The parity sandwich: ``eager_fn`` vs ``ProgramExecutor``.
+
+    ``feeds`` maps the single input tag to a Ciphertext (or, with
+    ``batched``, a list of them).  ``eager_fn(ctx, ct)`` produces the
+    eager reference per input.  ``exact`` compares bit-for-bit (the
+    ``fusion=False`` guarantee); otherwise decrypt-domain within
+    ``rel_tol`` relative error.  ``fewer_modups`` asserts the compiled
+    run's ModUp counter lands strictly below the eager run's;
+    ``reconcile`` asserts exact predicted-vs-executed reconciliation.
+    Returns the compiled output (a Ciphertext, or a list if batched).
+    """
+    (tag, val), = feeds.items()
+    cts = list(val) if batched else [val]
+    c = ctx.counters
+    s0 = c.snapshot()
+    exps = [eager_fn(ctx, ct) for ct in cts]
+    eager = c.delta(s0)
+
+    ex = ProgramExecutor(ctx)
+    s1 = c.snapshot()
+    if batched:
+        res = ex.run_batched(program, {tag: cts}, with_report=reconcile)
+        outs = res[out]
+    else:
+        res = ex.run(program, {tag: cts[0]}, with_report=reconcile)
+        outs = [res[out]]
+    compiled = c.delta(s1)
+
+    for got, exp in zip(outs, exps):
+        assert got.level == exp.level, (got.level, exp.level)
+        assert got.scale == exp.scale, (got.scale, exp.scale)
+        if exact:
+            assert ct_equal(got, exp), "compiled output != eager bitstream"
+        else:
+            g, e = ctx.decrypt(got), ctx.decrypt(exp)
+            denom = max(np.abs(e).max(), 1e-12)
+            assert np.abs(g - e).max() / denom < rel_tol
+    if fewer_modups:
+        assert compiled.modup < eager.modup, (compiled.modup, eager.modup)
+    if reconcile:
+        rec = res.report.reconcile()
+        assert rec["counts_match"], rec
+    return outs if batched else outs[0]

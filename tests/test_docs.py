@@ -1,7 +1,7 @@
 """Docs integrity: links and module references resolve.
 
 Three checks over ``docs/ARCHITECTURE.md``, ``docs/SERVING.md``,
-``docs/OBSERVABILITY.md`` and the README:
+``docs/OBSERVABILITY.md``, ``docs/WORKLOADS.md`` and the README:
   * every relative markdown link target exists on disk (anchors and
     external http(s) links are skipped);
   * every backticked repo path (``src/...``, ``benchmarks/...``,
@@ -20,6 +20,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 ARCH = REPO / "docs" / "ARCHITECTURE.md"
 SERVING = REPO / "docs" / "SERVING.md"
 OBS = REPO / "docs" / "OBSERVABILITY.md"
+WORKLOADS = REPO / "docs" / "WORKLOADS.md"
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
 PATH_RE = re.compile(r"`((?:src|benchmarks|tests|docs|examples)/[^`*?]+)`")
@@ -52,9 +53,19 @@ def test_observability_doc_exists():
     assert "6.67%" in text and "ui.perfetto.dev" in text
 
 
+def test_workloads_doc_exists():
+    assert WORKLOADS.is_file(), "docs/WORKLOADS.md is part of the deal"
+    text = WORKLOADS.read_text()
+    for section in ("Module map", "Packing layout",
+                    "Automatic bootstrap insertion", "Gates"):
+        assert section in text
+    # the bit-exactness + ModUp contract must stay stated
+    assert "bit-exact" in text and "ModUps" in text
+
+
 @pytest.mark.parametrize(
     "doc", ["docs/ARCHITECTURE.md", "docs/SERVING.md",
-            "docs/OBSERVABILITY.md", "README.md"])
+            "docs/OBSERVABILITY.md", "docs/WORKLOADS.md", "README.md"])
 def test_doc_relative_links_resolve(doc):
     path = REPO / doc
     assert path.is_file()
@@ -68,7 +79,7 @@ def test_doc_relative_links_resolve(doc):
     assert not bad, f"{doc}: dead relative links: {bad}"
 
 
-@pytest.mark.parametrize("doc", [ARCH, SERVING, OBS])
+@pytest.mark.parametrize("doc", [ARCH, SERVING, OBS, WORKLOADS])
 def test_doc_module_paths_resolve(doc):
     bad = []
     for ref in PATH_RE.findall(doc.read_text()):
@@ -77,7 +88,7 @@ def test_doc_module_paths_resolve(doc):
     assert not bad, f"{doc.name}: stale module references: {bad}"
 
 
-@pytest.mark.parametrize("doc", [SERVING, OBS])
+@pytest.mark.parametrize("doc", [SERVING, OBS, WORKLOADS])
 def test_doc_dotted_modules_import(doc):
     bad = []
     for mod in sorted(set(MODULE_RE.findall(doc.read_text()))):

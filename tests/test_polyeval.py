@@ -1,11 +1,17 @@
-"""Homomorphic polynomial evaluation tests."""
+"""Homomorphic polynomial evaluation tests.
+
+Includes direct numerics coverage for the plaintext half of
+``core/polyeval.py`` — the Chebyshev division identity behind the BSGS
+split and the interpolation error of ``chebyshev_coeffs`` — previously
+exercised only indirectly through EvalMod.
+"""
 import numpy as np
 import pytest
 
 from repro.core.ckks import CKKSContext
 from repro.core.params import CKKSParams
 from repro.core.polyeval import (
-    chebyshev_coeffs, eval_chebyshev, eval_poly_horner,
+    cheb_divmod, chebyshev_coeffs, eval_chebyshev, eval_poly_horner,
 )
 
 
@@ -13,6 +19,60 @@ from repro.core.polyeval import (
 def deep_ctx():
     p = CKKSParams(logN=9, L=12, alpha=3, k=4, q_bits=29, scale_bits=29)
     return CKKSContext(p, seed=11)
+
+
+def test_cheb_divmod_reconstruction_random(rng):
+    """c = q * T_g + r (deg r < g) for every legal (degree, giant-step)
+    pair: random complex coefficients, all g <= d <= 2g splits."""
+    import numpy.polynomial.chebyshev as C
+
+    x = np.linspace(-1, 1, 37)
+    for _ in range(40):
+        g = int(rng.integers(1, 33))
+        d = int(rng.integers(g, 2 * g + 1))
+        c = rng.normal(size=d + 1) + 1j * rng.normal(size=d + 1)
+        q, r = cheb_divmod(c, g)
+        assert len(r) == g and len(q) == d - g + 1
+        tg = np.zeros(g + 1)
+        tg[g] = 1.0
+        recon = C.chebval(x, q) * C.chebval(x, tg) + C.chebval(x, r)
+        assert np.abs(C.chebval(x, c) - recon).max() < 1e-10
+
+
+def test_cheb_divmod_rejects_illegal_split():
+    with pytest.raises(AssertionError):
+        cheb_divmod(np.zeros(10), 4)        # deg 9 > 2*4
+
+
+def test_chebyshev_coeffs_error_bounds(rng):
+    """Interpolation at Chebyshev nodes is near-minimax: the sampled
+    max error over [-1, 1] stays within the classical truncation bound
+    for analytic functions, and decays as the degree grows."""
+    x = rng.uniform(-1, 1, 4096)
+    cases = [
+        (lambda t: 1.0 / (1.0 + np.exp(-4.0 * t)), {7: 3e-3, 15: 1e-5}),
+        (lambda t: np.tanh(t), {7: 1e-4, 15: 1e-8}),
+        (lambda t: np.sin(3.0 * t), {7: 5e-4, 15: 1e-10}),
+    ]
+    for fn, bounds in cases:
+        errs = {}
+        for degree, bound in bounds.items():
+            c = chebyshev_coeffs(fn, degree)
+            assert len(c) == degree + 1
+            err = np.abs(
+                np.polynomial.chebyshev.chebval(x, c) - fn(x)).max()
+            assert err < bound, (degree, err, bound)
+            errs[degree] = err
+        assert errs[15] < errs[7]           # higher degree, tighter fit
+
+
+def test_chebyshev_coeffs_exact_on_polynomials():
+    """A degree-d polynomial is reproduced exactly (up to fp) by the
+    degree-d interpolant: interpolation at d+1 nodes is interpolatory."""
+    coeffs = chebyshev_coeffs(lambda t: 2 * t**3 - t + 0.25, 3)
+    x = np.linspace(-1, 1, 101)
+    got = np.polynomial.chebyshev.chebval(x, coeffs)
+    assert np.abs(got - (2 * x**3 - x + 0.25)).max() < 1e-12
 
 
 def test_chebyshev_sine(deep_ctx, rng):

@@ -27,10 +27,7 @@ from repro.core.polyeval import (
 from repro.runtime import ProgramExecutor, TraceContext, compile_program
 from repro.runtime.lower import MultiRelinStep, RelinStep
 
-
-def _ct_equal(a, b):
-    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
-            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+from parity import assert_program_parity, ct_equal as _ct_equal
 
 
 @pytest.fixture(scope="module")
@@ -261,7 +258,6 @@ def test_compiled_cheb_bitexact_relinsteps(relin_ctx, cheb_case):
     ctx = relin_ctx
     x, fn, coeffs = cheb_case
     ct = ctx.encrypt(x)
-    exp = eval_chebyshev_bsgs(ctx, ct, coeffs)
 
     tc = _trace_cheb(ctx.params, coeffs)
     comp = compile_program(tc)
@@ -269,10 +265,9 @@ def test_compiled_cheb_bitexact_relinsteps(relin_ctx, cheb_case):
     assert n_relin == comp.dfg.count(OpKind.CMULT)
     assert n_relin > 0
 
-    ex = ProgramExecutor(ctx)
-    got = ex.run(comp, {"x": ct})["y"]
-    assert _ct_equal(got, exp)
-    assert got.scale == exp.scale and got.level == exp.level
+    assert_program_parity(
+        ctx, comp, {"x": ct},
+        lambda c, t: eval_chebyshev_bsgs(c, t, coeffs))
 
 
 def test_compiled_cheb_multi_relin_fewer_moddowns(relin_ctx, cheb_case):

@@ -17,10 +17,7 @@ from repro.core.ckks import CKKSContext
 from repro.core.params import CKKSParams
 from repro.runtime import ProgramExecutor, TraceContext, compile_program
 
-
-def _ct_equal(a, b):
-    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
-            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+from parity import assert_program_parity, ct_equal as _ct_equal
 
 
 def _sparse(rng, nh, diag_steps):
@@ -66,31 +63,21 @@ def test_compiled_matvec_diag_bitexact(rctx, bsgs_case):
     tc = _trace_matvec(rctx.params, diags)
     comp = compile_program(tc)
     assert comp.n_hoisted == 1          # one PKB -> one hoisted block
-    ex = ProgramExecutor(rctx)
-    got = ex.run(comp, {"x": ct})["y"]
-    exp = linear.matvec_diag(rctx, ct, diags)
-    assert _ct_equal(got, exp)
-    assert got.scale == exp.scale and got.level == exp.level
+    got = assert_program_parity(
+        rctx, comp, {"x": ct},
+        lambda ctx, c: linear.matvec_diag(ctx, c, diags))
     ref = A @ z
     assert np.abs(rctx.decrypt(got) - ref).max() / np.abs(ref).max() < 1e-3
 
 
 def test_compiled_bsgs_bitexact_fewer_modups(rctx, bsgs_case):
     A, diags, z, ct = bsgs_case
-    c = rctx.counters
-    s0 = c.snapshot()
-    exp = linear.matvec_bsgs(rctx, ct, diags, bs=4)
-    eager_modups = c.delta(s0).modup
-
     comp = compile_program(_trace_matvec(rctx.params, diags, bs=4))
-    ex = ProgramExecutor(rctx)
-    s1 = c.snapshot()
-    got = ex.run(comp, {"x": ct})["y"]
-    compiled_modups = c.delta(s1).modup
-    assert _ct_equal(got, exp)
-    assert got.scale == exp.scale
     # the baby-step blocks share ONE ModUp through the digits cache
-    assert compiled_modups < eager_modups
+    assert_program_parity(
+        rctx, comp, {"x": ct},
+        lambda ctx, c: linear.matvec_bsgs(ctx, c, diags, bs=4),
+        fewer_modups=True, reconcile=True)
 
 
 def test_fused_bsgs_fewest_modups(rctx, bsgs_case):
@@ -141,10 +128,9 @@ def test_compiled_chebyshev_bitexact(cheb_ctx, cheb_case):
     from repro.core.polyeval import eval_chebyshev
 
     x, fn, coeffs, ct, comp = cheb_case
-    exp = eval_chebyshev(cheb_ctx, ct, coeffs)
-    got = ProgramExecutor(cheb_ctx).run(comp, {"x": ct})["y"]
-    assert _ct_equal(got, exp)
-    assert got.scale == exp.scale and got.level == exp.level
+    got = assert_program_parity(
+        cheb_ctx, comp, {"x": ct},
+        lambda ctx, c: eval_chebyshev(ctx, c, coeffs))
     assert np.abs(cheb_ctx.decrypt(got).real - fn(x)).max() < 5e-3
 
 
@@ -155,17 +141,15 @@ def test_batched_matvec_bitexact(rctx, bsgs_case):
     rng = np.random.default_rng(17)
     nh = rctx.params.num_slots
     comp = compile_program(_trace_matvec(rctx.params, diags, bs=4))
-    ex = ProgramExecutor(rctx)
     cts = [ct] + [
         rctx.encrypt(rng.normal(size=nh) + 1j * rng.normal(size=nh))
         for _ in range(2)
     ]
-    outs = ex.run_batched(comp, {"x": cts})["y"]
+    outs = assert_program_parity(
+        rctx, comp, {"x": cts},
+        lambda ctx, c: linear.matvec_bsgs(ctx, c, diags, bs=4),
+        batched=True)
     assert len(outs) == 3
-    for cti, outi in zip(cts, outs):
-        ref = ex.run(comp, {"x": cti})["y"]
-        assert _ct_equal(outi, ref)
-        assert outi.scale == ref.scale
 
 
 def test_batched_one_trace_per_plan(cheb_ctx, cheb_case):

@@ -18,10 +18,7 @@ from repro.core.params import CKKSParams
 from repro.runtime import ProgramExecutor, TraceContext, compile_program
 from repro.runtime.lower import MultiHoistedStep
 
-
-def _ct_equal(a, b):
-    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
-            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+from parity import assert_program_parity, ct_equal as _ct_equal
 
 
 @pytest.fixture(scope="module")
@@ -96,24 +93,15 @@ def test_compiled_s2c_bitexact_fewer_modups(small_boot, rng):
     nh = p.num_slots
     z = (rng.normal(size=nh) + 1j * rng.normal(size=nh)) * 0.01
     ct = ctx.encrypt(z)
-    c = ctx.counters
-
-    s0 = c.snapshot()
-    exp = btp.slot_to_coeff(ct)
-    eager = c.delta(s0)
 
     tc = TraceContext(p)
     h = tc.input("x", level=p.L, scale=p.scale)
     tc.output(btp.slot_to_coeff(h, tc), "y")
     comp = compile_program(tc)
-    ex = ProgramExecutor(ctx)
-    s1 = c.snapshot()
-    got = ex.run(comp, {"x": ct})["y"]
-    compiled = c.delta(s1)
-
-    assert _ct_equal(got, exp)
-    assert got.scale == exp.scale
-    assert compiled.modup < eager.modup
+    assert_program_parity(
+        ctx, comp, {"x": ct},
+        lambda c, t: btp.slot_to_coeff(t),
+        fewer_modups=True)
 
 
 def test_multi_anchor_one_moddown_error_bound(small_boot, c2s_traced, rng):

@@ -1,0 +1,212 @@
+"""End-to-end encrypted-inference workload tests.
+
+The acceptance gates of the workloads subsystem (ISSUE 9 / ROADMAP open
+item 4): packed logistic regression and a small MLP run through the
+compiled runtime's ``run_batched`` bit-exact with their eager replay at
+strictly fewer ModUps, reconcile exactly, and decrypt within each
+model's tolerance of the ``matvec_plain``+numpy reference; the
+level-tracking planner splices a bootstrap when the input level is
+forced too low, verified by decrypt accuracy after the exhaustion
+(tier-1) and full eager parity (slow).
+"""
+import numpy as np
+import pytest
+
+from repro.core.bootstrap import Bootstrapper
+from repro.core.ckks import CKKSContext
+from repro.core.params import CKKSParams
+from repro.errors import LevelExhaustedError
+from repro.workloads import (
+    WorkloadExecutor, compile_workload, logreg, mlp, mlp_bootstrap,
+    plan_cuts, scheduled_result, workload_blocks,
+)
+
+from parity import ct_equal
+
+
+@pytest.fixture(scope="module")
+def wctx():
+    p = CKKSParams(logN=8, L=14, alpha=2, k=3, q_bits=29, scale_bits=29)
+    return CKKSContext(p, seed=7)
+
+
+@pytest.fixture(scope="module")
+def boot_ctx():
+    # the deep bootstrap-capable shape of test_runtime_bootstrap's slow
+    # pipeline test; planning on it is symbolic and cheap
+    p = CKKSParams(logN=8, L=19, alpha=4, k=4, q_bits=29, scale_bits=29,
+                   q0_bits=30)
+    ctx = CKKSContext(p, seed=7, hamming_weight=8)
+    btp = Bootstrapper(ctx, n_groups=2, mod_K=3, cheb_degree=27)
+    return ctx, btp
+
+
+def _run_gates(ctx, m, wp, xs, btp=None, input_level=None):
+    """The workload sandwich: batched compiled vs per-ct eager replay
+    (bit-exact, strictly fewer ModUps, exact reconcile), then decrypt
+    accuracy against the plaintext reference."""
+    cts = [ctx.encrypt(x, level=input_level) if input_level is not None
+           else ctx.encrypt(x) for x in xs]
+    c = ctx.counters
+    s0 = c.snapshot()
+    exps = [wp.run_eager(ctx, ct, btp=btp) for ct in cts]
+    d_eager = c.delta(s0)
+
+    ex = WorkloadExecutor(ctx)
+    s1 = c.snapshot()
+    res = ex.run_batched(wp, cts, with_report=True)
+    d_comp = c.delta(s1)
+
+    for got, exp in zip(res.output, exps):
+        assert ct_equal(got, exp), "compiled workload != eager bitstream"
+        assert got.scale == exp.scale and got.level == exp.level
+    assert d_comp.modup < d_eager.modup, (d_comp.modup, d_eager.modup)
+    rec = res.reconcile()
+    assert rec["counts_match"], rec
+    for x, got in zip(xs, res.output):
+        err = np.abs(ctx.decrypt(got).real - m.reference(x)).max()
+        assert err < m.tolerance, (err, m.tolerance)
+    return res
+
+
+def test_logreg_batched_e2e(wctx, rng):
+    """Packed logistic regression (matvec-BSGS + degree-15 sigmoid):
+    9 levels, run from input_level=9 on the L=14 chain."""
+    p = wctx.params
+    m = logreg(p.num_slots, bs=4)
+    wp = compile_workload(m, p, input_level=9)
+    assert wp.n_bootstraps == 0 and len(wp.segments) == 1
+    assert wp.output_level == 0
+    xs = [m.sample(rng) for _ in range(2)]
+    _run_gates(wctx, m, wp, xs, input_level=9)
+
+
+def test_mlp_batched_e2e(wctx, rng):
+    """Two dense+sigmoid layers: the full 14-level budget."""
+    p = wctx.params
+    m = mlp(p.num_slots, bs=4)
+    wp = compile_workload(m, p)
+    assert wp.n_bootstraps == 0
+    xs = [m.sample(rng) for _ in range(2)]
+    _run_gates(wctx, m, wp, xs)
+
+
+def test_workload_feeds_scheduler(wctx):
+    """Lowered workload blocks drive the Sec. V group scheduler."""
+    from repro.sim import HE2_SM
+
+    p = wctx.params
+    m = logreg(p.num_slots, bs=4)
+    wp = compile_workload(m, p, input_level=9)
+    blocks = workload_blocks(wp, batch=2)
+    assert blocks
+    assert sum(b.volumes.modup_count for b in blocks) > 0
+    sched = scheduled_result(wp, HE2_SM, batch=2)
+    assert sched.latency_s > 0 and sched.timelines
+
+
+def test_plan_without_bootstrapper_raises(wctx):
+    """Level exhaustion without a Bootstrapper is a typed error."""
+    p = wctx.params
+    m = mlp_bootstrap(p.num_slots, bs=4)
+    with pytest.raises(LevelExhaustedError, match="Bootstrapper"):
+        plan_cuts(m, p, input_level=7)
+
+
+def test_plan_inserts_cut_at_forced_exhaustion(boot_ctx):
+    """input_level=7 fits layer 1 (7 levels) but not the head: the
+    planner must splice exactly one bootstrap between the layers, and
+    score the candidate boundaries."""
+    ctx, btp = boot_ctx
+    p = ctx.params
+    m = mlp_bootstrap(p.num_slots, bs=4)
+    plan = plan_cuts(m, p, btp=btp, input_level=7)
+    assert plan.n_bootstraps == 1
+    assert plan.spans == [(0, 1), (1, 2)]
+    assert plan.cuts[0].after_stage == 1
+    assert plan.cuts[0].scores[1] is not None
+    assert plan.output_level >= 1
+    assert any(row["stage"] == "<bootstrap>" for row in plan.table)
+    # with the full chain available no cut is needed
+    deep = plan_cuts(m, p, btp=btp)
+    assert deep.n_bootstraps == 0
+
+
+def test_bootstrap_insertion_decrypt_accuracy(boot_ctx, rng):
+    """Forced level exhaustion, tier-1 half: compile the bootstrap-
+    inserted chain and check the compiled run decrypts within tolerance
+    and reconciles (full eager parity is the slow test below)."""
+    ctx, btp = boot_ctx
+    p = ctx.params
+    m = mlp_bootstrap(p.num_slots, bs=4)
+    wp = compile_workload(m, p, btp=btp, input_level=7)
+    assert wp.n_bootstraps == 1 and len(wp.segments) == 3
+    x = m.sample(rng)
+    ct = ctx.encrypt(x, level=7)
+    res = WorkloadExecutor(ctx).run(wp, ct, with_report=True)
+    err = np.abs(ctx.decrypt(res.output).real - m.reference(x)).max()
+    assert err < m.tolerance, (err, m.tolerance)
+    rec = res.reconcile()
+    assert rec["counts_match"], rec
+    assert len(rec["segments"]) == 3
+
+
+@pytest.mark.slow
+def test_bootstrap_insertion_full_parity(boot_ctx, rng):
+    """Forced level exhaustion, full sandwich: the three-segment chain
+    (compute -> bootstrap -> compute) is bit-exact with the eager
+    replay at strictly fewer ModUps."""
+    ctx, btp = boot_ctx
+    p = ctx.params
+    m = mlp_bootstrap(p.num_slots, bs=4)
+    wp = compile_workload(m, p, btp=btp, input_level=7)
+    xs = [m.sample(rng)]
+    _run_gates(ctx, m, wp, xs, btp=btp, input_level=7)
+
+
+def test_workload_summary_shape(wctx):
+    p = wctx.params
+    m = logreg(p.num_slots, bs=4)
+    wp = compile_workload(m, p, input_level=9)
+    s = wp.summary()
+    assert s["workload"] == "logreg" and s["n_segments"] == 1
+    assert s["predicted_modups"] == wp.predicted_modups() > 0
+    assert [row["stage"] for row in s["levels"]] == ["logits"]
+
+
+def test_workload_backed_serving(rng):
+    """serve.workload_request_programs: a compiled workload serves
+    requests through FHEServer's continuous-batching loop."""
+    from repro.serve import FHEServer, poisson_trace, \
+        workload_request_programs
+
+    p = CKKSParams(logN=8, L=8, alpha=2, k=3, q_bits=29, scale_bits=29)
+    ctx = CKKSContext(p, seed=3)
+    m = logreg(p.num_slots, degree=7, bs=4)    # 7 levels: fits L=8
+    programs, chains = workload_request_programs([m], p)
+    assert chains[m.name] == [(m.name, "x", "y")]
+
+    server = FHEServer(ctx, max_batch=2, max_wait_s=0.0)
+    for pid, comp in programs.items():
+        server.register_program(pid, comp)
+    trace = poisson_trace(200.0, 4, ["t0"], [m.name], seed=1)
+
+    with server.registry.lease("t0"):
+        ct0 = ctx.encrypt(np.zeros(p.num_slots))
+    for w in (1, 2):
+        server.warmup("t0", m.name, {"x": ct0}, width=w)
+
+    sent = {}
+
+    def inputs_for(a):
+        x = m.sample(rng)
+        sent[len(sent)] = x
+        return {"x": ctx.encrypt(x)}
+
+    rep = server.run_trace(trace, inputs_for)
+    assert rep.completed == 4 and rep.failed == 0
+    with server.registry.lease("t0"):
+        for rid in range(4):
+            got = ctx.decrypt(server.outputs[rid]["y"]).real
+            err = np.abs(got - m.reference(sent[rid])).max()
+            assert err < m.tolerance, (rid, err)
