@@ -1,0 +1,181 @@
+"""Pallas kernel-suite benchmark: batched jnp vs pallas, bit-exact gate.
+
+Times every batched engine entry the compiled runtime dispatches
+(ModUp / rotation / relin / hoisted rotation sum) plus one end-to-end
+compiled CoeffToSlot program on BOTH backends, and writes
+BENCH_pallas.json.
+
+Two gates, both enforced (raise -> CI fails loudly):
+
+  * bit-exactness — ALWAYS: every pallas output must equal the jnp
+    output bit for bit, per op and end to end.  This is the contract
+    that lets the serving layer pick the backend freely.
+  * performance — only when the pallas kernels compile for real
+    hardware (``interpret=False``, i.e. a TPU is attached): batched
+    pallas must be at least as fast as batched jnp on the fused ModUp
+    path (``pallas >= jnp``).  Off-TPU the kernels run the Pallas
+    interpreter (functional parity, not speed) and only the
+    bit-exactness gate applies; the timings are still recorded with
+    ``interpret: true`` so the record is unambiguous.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+# Perf gate (interpret=False only): fused-ModUp pallas must not be
+# slower than the jnp contraction path on the same batched plan.
+GATE_MIN_SPEEDUP = 1.0
+
+ROT_STEPS = [1, 2, 3, 4]
+
+
+def _params(logn: int):
+    from repro.core.params import CKKSParams
+
+    # L=5, alpha=2 -> dnum=3 digits; level 5 exercises the deepest plan.
+    return CKKSParams(logN=logn, L=5, alpha=2, k=3, q_bits=29,
+                      scale_bits=29)
+
+
+def _time(fn, reps: int) -> float:
+    """us/call after one warmup call (jit trace + plan-cache fill)."""
+    import jax
+
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6 / reps
+
+
+def _bench_backend(ctx, comp, zs, reps: int):
+    """Per-op us/call + raw outputs (for the bit-exactness gate)."""
+    import jax.numpy as jnp
+
+    from repro.runtime import ProgramExecutor
+
+    eng = ctx.engine
+    rng = np.random.default_rng(common.SEED)
+    nh = ctx.params.num_slots
+    cts = [ctx.encrypt(z) for z in zs]
+    lvl = cts[0].level
+    c0b = jnp.stack([c.c0 for c in cts])
+    c1b = jnp.stack([c.c1 for c in cts])
+    gs = [ctx.pc.rns.galois_for_rotation(s) for s in ROT_STEPS]
+    evks = [ctx.keys.rot_key(s) for s in ROT_STEPS]
+    pts = tuple(ctx.encode(rng.normal(size=nh), level=lvl)
+                for _ in ROT_STEPS)
+    pm_ext, pm_base, pm_ext_m = ctx._pm_stack(pts, lvl)
+    mk = ctx.keys.mult_key
+
+    ops = {
+        "modup_batched": lambda: eng.modup_batched(c1b, lvl),
+        "rotate_batched": lambda: eng.apply_galois_batched(
+            c0b, c1b, gs[0], evks[0], lvl),
+        "relin_batched": lambda: eng.relin_batched(
+            c0b, c1b, c1b, mk, lvl),
+        "hoisted_rotation_sum_batched": lambda:
+            eng.hoisted_rotation_sum_batched(
+                c0b, c1b, gs, evks, lvl, pm_ext=pm_ext, pm_base=pm_base,
+                pm_ext_mont=pm_ext_m),
+    }
+    times = {name: _time(fn, reps) for name, fn in ops.items()}
+    outs = {}
+    for name, fn in ops.items():
+        out = fn()
+        outs[name] = (np.stack([np.asarray(o) for o in out])
+                      if isinstance(out, tuple) else np.asarray(out))
+
+    ex = ProgramExecutor(ctx)
+    times["compiled_c2s_batched"] = _time(
+        lambda: ex.run_batched(comp, {"x": cts}).outputs["y"][0].c0, reps)
+    res = ex.run_batched(comp, {"x": cts})
+    outs["compiled_c2s_batched"] = np.stack(
+        [np.asarray(c.c0) for c in res.outputs["y"]])
+    return times, outs
+
+
+def run() -> list[str]:
+    from repro.core.bootstrap import Bootstrapper
+    from repro.core.ckks import CKKSContext
+    from repro.kernels.modops import default_interpret
+    from repro.runtime import TraceContext, compile_program
+
+    RESULTS.mkdir(exist_ok=True)
+    interpret = bool(default_interpret())
+    logn = 8 if common.SMOKE else 9
+    batch = 2 if common.SMOKE else 4
+    reps = 1 if (common.SMOKE or interpret) else 5
+
+    p = _params(logn)
+    rng = np.random.default_rng(common.SEED)
+    nh = p.num_slots
+    zs = [(rng.normal(size=nh) + 1j * rng.normal(size=nh)) * 0.01
+          for _ in range(batch)]
+
+    summary: dict = {
+        "params": {"logN": logn, "L": 5, "alpha": 2, "dnum": 3,
+                   "batch": batch},
+        "interpret": interpret,
+    }
+    results = {}
+    for b in ("jnp", "pallas"):
+        ctx = CKKSContext(p, seed=3 + common.SEED, backend=b)
+        btp = Bootstrapper(ctx, n_groups=2, mod_K=3, cheb_degree=15)
+        tc = TraceContext(p)
+        h = tc.input("x", level=p.L, scale=p.scale)
+        tc.output(btp.coeff_to_slot(h, tc), "y")
+        results[b] = _bench_backend(ctx, compile_program(tc), zs, reps)
+        summary[f"engine_{b}"] = results[b][0]
+
+    # --- bit-exactness gate: ALWAYS enforced -------------------------
+    mismatches = [
+        op for op in results["jnp"][1]
+        if not np.array_equal(results["jnp"][1][op],
+                              results["pallas"][1][op])
+    ]
+    summary["bitexact"] = {"passed": not mismatches,
+                           "mismatches": mismatches}
+
+    # --- perf gate: only when compiled for real hardware -------------
+    speedups = {op: summary["engine_jnp"][op] / summary["engine_pallas"][op]
+                for op in summary["engine_jnp"]}
+    summary["speedup_pallas_vs_jnp"] = speedups
+    perf_gated = not interpret
+    perf_ok = (not perf_gated
+               or speedups["modup_batched"] >= GATE_MIN_SPEEDUP)
+    summary["gate"] = {
+        "bitexact_required": True,
+        "perf_required": perf_gated,
+        "perf_min_speedup": GATE_MIN_SPEEDUP,
+        "modup_speedup": speedups["modup_batched"],
+        "passed": not mismatches and perf_ok,
+    }
+    (RESULTS / "BENCH_pallas.json").write_text(json.dumps(summary, indent=2))
+
+    lines = []
+    for op in summary["engine_jnp"]:
+        lines.append(f"pallas/{op}/jnp,{summary['engine_jnp'][op]:.0f},"
+                     f"logN={logn};batch={batch}")
+        lines.append(f"pallas/{op}/pallas,{summary['engine_pallas'][op]:.0f},"
+                     f"interpret={interpret};speedup="
+                     f"{speedups[op]:.2f}x")
+    if mismatches:
+        raise RuntimeError(
+            f"pallas bit-exactness gate FAILED: {mismatches} differ "
+            f"from the jnp backend")
+    if not perf_ok:
+        raise RuntimeError(
+            f"pallas perf gate FAILED: modup_batched "
+            f"{speedups['modup_batched']:.2f}x < {GATE_MIN_SPEEDUP}x vs jnp "
+            f"(interpret=False)")
+    return lines

@@ -31,16 +31,17 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        bench_bootstrap, bench_keyswitch, bench_runtime, bench_serving,
-        bench_workloads, common, fig6_parallelism, fig7_bsgs,
-        fig14_ablation, fig15_hero, fig16_util, fig17_sensitivity,
-        table1_ai, table4_end2end,
+        bench_bootstrap, bench_keyswitch, bench_pallas, bench_runtime,
+        bench_serving, bench_workloads, common, fig6_parallelism,
+        fig7_bsgs, fig14_ablation, fig15_hero, fig16_util,
+        fig17_sensitivity, table1_ai, table4_end2end,
     )
 
     modules = {
         "table1": table1_ai,
         "table4": table4_end2end,
         "keyswitch": bench_keyswitch,
+        "pallas": bench_pallas,
         "runtime": bench_runtime,
         "bootstrap": bench_bootstrap,
         "workloads": bench_workloads,

@@ -36,7 +36,7 @@ ModUp feeds every block anchored on the same ciphertext (callers pass
 ``digits=`` to reuse a prior ``modup``'s stacked ``(dnum, l_ext, N)``
 tensor instead of paying a fresh ModUp), the ``*_batched`` entry
 points ``jax.vmap`` a whole batch of independent ciphertexts through
-one trace (jnp backend; a new batch width is a new trace, hence the
+one trace (either backend; a new batch width is a new trace, hence the
 serving layer's fixed-width padding), and every dispatch tallies
 ``OpCounters`` so reports can reconcile executed ModUp/ModDown/IP
 counts against ``dfg.hoist`` predictions.
@@ -52,15 +52,24 @@ ModDown), driven by ``runtime.lower.MultiRelinStep``.
 
 Backends (``PolyContext.backend``):
   * ``"jnp"``    — exact uint64 ``(a * b) % q`` ops, batched as above.
-  * ``"pallas"`` — NTT/BConv/IP dispatch to the uint32 Montgomery
-    Pallas kernel suite (``kernels/ntt``, ``kernels/bconv``,
-    ``kernels/fused_ip``), ``interpret=True`` off-TPU.  The kernels'
+  * ``"pallas"`` — uint32 Montgomery Pallas kernel suite.  ModUp runs
+    the FUSED kernel (``kernels/modup``): one ``pallas_call`` per digit
+    executes INTT -> BConv tree-reduce -> NTT with the digit
+    VMEM-resident across all three phases (the BConv scale folded into
+    the INTT post-twist), no per-phase HBM intermediates.  ModDown and
+    the inner product dispatch ``kernels/ntt``/``kernels/bconv``/
+    ``kernels/fused_ip``; ``interpret=True`` off-TPU.  The kernels'
     bit-reversed eval order is bridged to the core's natural order by a
-    single ``bitrev`` permutation at NTT boundaries; Montgomery evk /
-    plaintext tables are built once per context and cached.
+    single ``bitrev`` permutation at kernel boundaries; Montgomery evk /
+    plaintext tables are built once per context and cached.  Every
+    kernel wrapper carries a ``jax.custom_vmap`` rule folding the batch
+    axis into its grid, so the ``*_batched`` entry points run on either
+    backend — the serving layer and compiled runtime batch pallas plans
+    exactly like jnp ones.
 
-Both backends are bit-exact with the seed per-digit path (enforced by
-``tests/test_keyswitch_engine.py``).
+Both backends are bit-exact with the seed per-digit path on every entry
+point, batched included (enforced by ``tests/test_keyswitch_engine.py``
+and ``tests/test_relin.py``).
 """
 from __future__ import annotations
 
@@ -77,6 +86,7 @@ from repro.errors import ModulusChainMismatchError
 from repro.kernels.bconv.ops import bconv_kernel
 from repro.kernels.fused_ip.ops import fused_ip_mont
 from repro.kernels.modops import default_interpret, qinv_neg_host
+from repro.kernels.modup.ops import modup_digit
 from repro.kernels.ntt.ops import ntt_fwd, ntt_inv, tables_for
 
 if TYPE_CHECKING:  # avoid importing keys at runtime (ckks -> keyswitch)
@@ -253,6 +263,16 @@ class KeyswitchEngine:
         obs.event("engine.jit_trace", key=str(key), count=n,
                   retrace=n > 1)
 
+    def _note_dispatch(self, op: str) -> None:
+        """Kernel-dispatch event: lets Perfetto traces tell a pallas
+        executor span (fused ModUp kernel, interpret flag recorded) from
+        a jnp one (op-by-op uint64) without changing the span labels."""
+        obs.event(
+            "engine.kernel_dispatch", op=op, backend=self.backend,
+            modup="fused" if self.backend == "pallas" else "op-by-op",
+            interpret=self.backend == "pallas" and self.interpret,
+        )
+
     # ------------------------- evk stacking ----------------------------
     def _admit_evk(self, evk: EvalKey) -> None:
         """Cache-admission guard: an evk generated under different
@@ -343,19 +363,24 @@ class KeyswitchEngine:
 
     def _modup(self, a, plan: KeyswitchPlan):
         """(l, N) eval -> (dnum, l_ext, N) eval, all digits at once."""
-        coeff = self._intt(a, plan.base, plan)
         if self.backend == "pallas":
+            # ONE fused pallas_call per digit (kernels/modup): INTT ->
+            # BConv tree-reduce -> NTT with the digit VMEM-resident
+            # across all three phases — no per-phase HBM intermediates.
+            # The bitrev bridge happens ONCE at each boundary; own-limb
+            # passthrough stays outside the kernel (shared below).
+            x = a[:, plan.bitrev].astype(jnp.uint32)
             digs = []
             row = 0
             for D in plan.groups:
-                digs.append(bconv_kernel(
-                    coeff[row : row + len(D)].astype(jnp.uint32), D,
-                    plan.ext, self.pc.rns, interpret=self.interpret,
+                digs.append(modup_digit(
+                    x[row : row + len(D)], tuple(D), plan.ext,
+                    self.tabs, self.pc.rns, interpret=self.interpret,
                 ))
                 row += len(D)
-            conv = jnp.stack(digs).astype(jnp.uint64)
-            conv = conv.reshape(plan.dnum * plan.l_ext, plan.N)
+            conv = jnp.stack(digs)[:, :, plan.bitrev].astype(jnp.uint64)
         else:
+            coeff = self._intt(a, plan.base, plan)
             t = (coeff * plan.qinv[:, None]) % plan.base_mods[:, None]
             td = t[plan.src_idx]                       # (dnum, alpha, N)
             em = plan.ext_mods[None, :, None]
@@ -369,8 +394,8 @@ class KeyswitchEngine:
                 ) % em[None]
                 conv = (conv + part.sum(axis=1)) % em
             conv = conv.reshape(plan.dnum * plan.l_ext, plan.N)
-        conv = self._ntt(conv, plan.ext_tiled, plan)
-        conv = conv.reshape(plan.dnum, plan.l_ext, plan.N)
+            conv = self._ntt(conv, plan.ext_tiled, plan)
+            conv = conv.reshape(plan.dnum, plan.l_ext, plan.N)
         own = a[plan.own_idx]                          # (dnum, l_ext, N)
         return jnp.where(plan.own_mask[:, :, None], own, conv)
 
@@ -634,31 +659,6 @@ class KeyswitchEngine:
             self._batch_fns[key] = jax.jit(make())
         return self._batch_fns[key]
 
-    def _require_jnp(self, what: str) -> None:
-        """Gate the vmap-batched entry points to the jnp backend.
-
-        The Pallas kernel suite (``kernels/ntt``, ``kernels/bconv``,
-        ``kernels/fused_ip``) is not ``jax.vmap``-compatible yet — its
-        grid specs are written against unbatched operand shapes — so a
-        ``backend="pallas"`` engine cannot trace the batched rotation or
-        relin plans.  The unbatched entry points (``keyswitch``,
-        ``hoisted_rotation_sum``, ``relin``, ``multi_relin_sum``) run on
-        either backend.  See the ROADMAP follow-on "make the Pallas
-        kernel suite vmap-compatible" and the skip-marked anchor test in
-        ``tests/test_relin.py``.
-        """
-        if self.backend != "jnp":
-            raise NotImplementedError(
-                f"KeyswitchEngine.{what} is batched via jax.vmap and "
-                f"requires backend='jnp'; the Pallas kernel suite "
-                f"(kernels/ntt, kernels/bconv, kernels/fused_ip) is not "
-                f"vmap-compatible yet, so backend='pallas' can only "
-                f"dispatch the unbatched entry points.  Construct the "
-                f"context with backend='jnp' for batched/compiled-batch "
-                f"programs (ROADMAP: 'make the Pallas kernel suite "
-                f"vmap-compatible')."
-            )
-
     def _ks_batched_fn(self, level: int):
         plan = self._plan(level)
 
@@ -785,11 +785,13 @@ class KeyswitchEngine:
     # ------------------------- public API ------------------------------
     def keyswitch(self, a, evk: EvalKey, level: int):
         """ModUp -> IP -> ModDown of poly ``a``: (d0, d1) under Q_level."""
+        self._note_dispatch("keyswitch")
         self._note_keyswitch(self._plan(level))
         return self._ks_fn(level)(a, self.evk_tensor(evk, level))
 
     def apply_galois(self, c0, c1, galois: int, evk: EvalKey, level: int):
         """Fused rotate: eval-domain automorphism + keyswitch of c1."""
+        self._note_dispatch("rotate")
         self._note_keyswitch(self._plan(level))
         self.counters.rotation += 1
         perm = self.perm_tensor([galois])[0]
@@ -802,6 +804,7 @@ class KeyswitchEngine:
 
         The runtime executor shares the result across all hoisted blocks
         anchored on the same ciphertext (cross-block double hoisting)."""
+        self._note_dispatch("modup")
         plan = self._plan(level)
         self.counters.note_modup(plan.l, plan.l_ext, plan.group_sizes,
                                  plan.N)
@@ -819,6 +822,7 @@ class KeyswitchEngine:
         ``digits``: pre-computed ModUp digits from :meth:`modup` — the
         internal ModUp is skipped (bit-exact with the monolithic path).
         """
+        self._note_dispatch("hoisted_rotation_sum")
         plan = self._plan(level)
         self._note_hoisted(plan, len(galois_list), digits is None)
         perms = self.perm_tensor(galois_list)
@@ -844,6 +848,7 @@ class KeyswitchEngine:
         but not bit-identical with, per-rotation keyswitches (the
         approximate-FBC rounding of the merged ModDowns differs).
         """
+        self._note_dispatch("multi_hoisted_rotation_sum")
         plan = self._plan(level)
         n = len(galois_list)
         c = self.counters
@@ -867,6 +872,7 @@ class KeyswitchEngine:
         ModDown, and the base-domain folds into d0/d1 — all inside one
         cached jit plan.  Bit-exact with keyswitch-then-add.
         """
+        self._note_dispatch("relin")
         plan = self._plan(level)
         self._note_relin(plan, digits is None)
         fn = self._relin_fn(level, digits is not None)
@@ -888,6 +894,7 @@ class KeyswitchEngine:
         the merged ModDowns differs), exactly like
         :meth:`multi_hoisted_rotation_sum`.
         """
+        self._note_dispatch("multi_relin_sum")
         plan = self._plan(level)
         n = len(digits_list)
         self._note_relin(plan, with_modup=False, n=n)
@@ -899,13 +906,13 @@ class KeyswitchEngine:
     # -------- batched public API (leading ct axis, jnp backend) --------
     def keyswitch_batched(self, ab, evk: EvalKey, level: int):
         """Batched keyswitch of (B, l, N) polys through ONE jit trace."""
-        self._require_jnp("keyswitch")
+        self._note_dispatch("keyswitch_batched")
         self._note_keyswitch(self._plan(level), m=int(ab.shape[0]))
         return self._ks_batched_fn(level)(ab, self.evk_tensor(evk, level))
 
     def apply_galois_batched(self, c0b, c1b, galois: int, evk: EvalKey,
                              level: int):
-        self._require_jnp("rotate")
+        self._note_dispatch("rotate_batched")
         self._note_keyswitch(self._plan(level), m=int(c0b.shape[0]))
         self.counters.rotation += int(c0b.shape[0])
         perm = self.perm_tensor([galois])[0]
@@ -914,7 +921,7 @@ class KeyswitchEngine:
         )
 
     def modup_batched(self, ab, level: int):
-        self._require_jnp("modup")
+        self._note_dispatch("modup_batched")
         plan = self._plan(level)
         plan_sizes = plan.group_sizes
         self.counters.note_modup(plan.l, plan.l_ext, plan_sizes, plan.N,
@@ -925,7 +932,7 @@ class KeyswitchEngine:
                                            galois_list, evks, level: int):
         """Batched multi-anchor accumulation: per-term (B, l, N) c0s and
         (B, dnum, l_ext, N) digits, vmapped over the ct axis."""
-        self._require_jnp("multi_hoisted_rotation_sum")
+        self._note_dispatch("multi_hoisted_rotation_sum_batched")
         plan = self._plan(level)
         n = len(galois_list)
         m = int(c0s[0].shape[0])
@@ -944,7 +951,7 @@ class KeyswitchEngine:
                       digits=None):
         """Batched relinearization of (B, l, N) degree-2 components
         through ONE jit trace (``digits``: (B, dnum, l_ext, N))."""
-        self._require_jnp("relin")
+        self._note_dispatch("relin_batched")
         plan = self._plan(level)
         self._note_relin(plan, digits is None, m=int(d0b.shape[0]))
         fn = self._relin_batched_fn(level, digits is not None)
@@ -955,7 +962,7 @@ class KeyswitchEngine:
                                 evk: EvalKey, level: int):
         """Batched multi-relin accumulation: per-term (B, l, N) d0/d1
         and (B, dnum, l_ext, N) digits, vmapped over the ct axis."""
-        self._require_jnp("multi_relin_sum")
+        self._note_dispatch("multi_relin_sum_batched")
         plan = self._plan(level)
         n = len(digits_list)
         self._note_relin(plan, with_modup=False, n=n,
@@ -971,7 +978,7 @@ class KeyswitchEngine:
                                      digits=None):
         """vmap over the ct axis: (B, l, N) c0/c1 (or (B, dnum, l_ext, N)
         pre-computed ``digits``), shared perm/evk/plaintext tensors."""
-        self._require_jnp("hoisted_rotation_sum")
+        self._note_dispatch("hoisted_rotation_sum_batched")
         plan = self._plan(level)
         self._note_hoisted(plan, len(galois_list), digits is None,
                            m=int(c0b.shape[0]))

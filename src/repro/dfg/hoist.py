@@ -56,23 +56,37 @@ class OpVolumes:
     # weights its up-phase xPU slices by these instead of a uniform
     # split; blocks of differing dnum drop the legs when summed.
     modup_legs: tuple = ()
+    # Per-digit ModDown leg volumes — ((ntt_words, bconv_macs,
+    # ewo_words), ...), one entry per decomposition digit.  The IP
+    # accumulation streams back digit-by-digit in the same group order
+    # the ModUp went up, so the down-phase xPU work (INTT of the
+    # returned slice + BConv + subtract/scale) is attributable to the
+    # digit whose base limbs it restores.
+    moddown_legs: tuple = ()
+
+    _LEG_FIELDS = ("modup_legs", "moddown_legs")
 
     def __add__(self, o: "OpVolumes") -> "OpVolumes":
         out = OpVolumes(*[
             getattr(self, f.name) + getattr(o, f.name)
-            for f in dataclasses.fields(self) if f.name != "modup_legs"
+            for f in dataclasses.fields(self)
+            if f.name not in self._LEG_FIELDS
         ])
-        out.modup_legs = _merge_legs(self.modup_legs, o.modup_legs)
+        for name in self._LEG_FIELDS:
+            setattr(out, name,
+                    _merge_legs(getattr(self, name), getattr(o, name)))
         return out
 
     def scaled(self, c: float) -> "OpVolumes":
         out = OpVolumes(*[
             getattr(self, f.name) * c
-            for f in dataclasses.fields(self) if f.name != "modup_legs"
+            for f in dataclasses.fields(self)
+            if f.name not in self._LEG_FIELDS
         ])
-        out.modup_legs = tuple(
-            (ntt * c, bc * c) for ntt, bc in self.modup_legs
-        )
+        for name in self._LEG_FIELDS:
+            setattr(out, name, tuple(
+                tuple(x * c for x in leg) for leg in getattr(self, name)
+            ))
         return out
 
     @property
@@ -86,15 +100,18 @@ class OpVolumes:
 
 
 def _merge_legs(a: tuple, b: tuple) -> tuple:
-    """Elementwise sum of per-digit legs; blocks of differing dnum (or a
-    legless operand with real volumes) cannot be attributed per digit."""
+    """Elementwise sum of per-digit legs (any leg arity); blocks of
+    differing dnum (or a legless operand with real volumes) cannot be
+    attributed per digit."""
     if not a:
         return b
     if not b:
         return a
     if len(a) != len(b):
         return ()
-    return tuple((x0 + y0, x1 + y1) for (x0, x1), (y0, y1) in zip(a, b))
+    return tuple(
+        tuple(x + y for x, y in zip(ea, eb)) for ea, eb in zip(a, b)
+    )
 
 
 def _region_ewo_count(pkb: PKB) -> int:
@@ -143,6 +160,21 @@ def moddown_volumes(l: int, k: int, alpha: int, N: int,
     v.moddown_ntt_words = v.ntt_words
     v.moddown_bconv_macs = v.bconv_macs
     v.moddown_count = components // 2 if components >= 2 else 1
+    # per-digit legs: the IP accumulation streams back in the same digit
+    # order it went up, so digit g's returned slice restores its own a_g
+    # base limbs — NTT back (a_g rows) plus its share a_g/l of the P-part
+    # INTT, BConv into a_g limbs, and the subtract/scale EWO on them.
+    # Legs sum exactly to (ntt_words, bconv_macs, xpu_ewo_words).
+    dnum = -(-l // alpha)
+    v.moddown_legs = tuple(
+        (
+            components * (min(alpha, l - g * alpha) * N
+                          + k * N * min(alpha, l - g * alpha) / l),
+            components * k * min(alpha, l - g * alpha) * N,
+            components * 2 * min(alpha, l - g * alpha) * N,
+        )
+        for g in range(dnum)
+    )
     return v
 
 

@@ -39,40 +39,44 @@ def _reduce_kernel(t_ref, c_ref, d_ref, dneg_ref, o_ref, *, ls: int):
 
 def bconv_pallas(x, qhat_inv_mont, src_q, src_qneg, c_mont, dst_q, dst_qneg,
                  *, block: int = 0, interpret: bool = True):
-    """x: (ls, N) uint32 coeff domain -> (ld, N) under the dst basis.
+    """x: (B*ls, N) uint32 coeff domain -> (B*ld, N) under the dst basis,
+    batch-major rows (B inferred from the row count).
 
     qhat_inv_mont: (ls, 1); c_mont: (ls, ld) Montgomery of qhat_i mod d_j;
-    src_q/src_qneg: (ls, 1); dst_q/dst_qneg: (ld, 1).
+    src_q/src_qneg: (ls, 1); dst_q/dst_qneg: (ld, 1).  Batched rows read
+    their limb's constants via ``% ls`` / ``% ld`` index maps.
     """
-    ls, n = x.shape
+    rows, n = x.shape
+    ls = qhat_inv_mont.shape[0]
     ld = c_mont.shape[1]
+    b = rows // ls
     blk = block or n
 
     t = pl.pallas_call(
         _scale_kernel,
-        grid=(ls,),
+        grid=(rows,),
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, ls=ls: (i % ls, 0)),
+            pl.BlockSpec((1, 1), lambda i, ls=ls: (i % ls, 0)),
+            pl.BlockSpec((1, 1), lambda i, ls=ls: (i % ls, 0)),
         ],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((ls, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.uint32),
         interpret=interpret,
     )(x, qhat_inv_mont, src_q, src_qneg)
 
     kernel = functools.partial(_reduce_kernel, ls=ls)
     return pl.pallas_call(
         kernel,
-        grid=(ld, n // blk),
+        grid=(b * ld, n // blk),
         in_specs=[
-            pl.BlockSpec((ls, blk), lambda j, b: (0, b)),
-            pl.BlockSpec((ls, 1), lambda j, b: (0, j)),
-            pl.BlockSpec((1, 1), lambda j, b: (j, 0)),
-            pl.BlockSpec((1, 1), lambda j, b: (j, 0)),
+            pl.BlockSpec((ls, blk), lambda j, b, ld=ld: (j // ld, b)),
+            pl.BlockSpec((ls, 1), lambda j, b, ld=ld: (0, j % ld)),
+            pl.BlockSpec((1, 1), lambda j, b, ld=ld: (j % ld, 0)),
+            pl.BlockSpec((1, 1), lambda j, b, ld=ld: (j % ld, 0)),
         ],
         out_specs=pl.BlockSpec((1, blk), lambda j, b: (j, b)),
-        out_shape=jax.ShapeDtypeStruct((ld, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((b * ld, n), jnp.uint32),
         interpret=interpret,
     )(t, c_mont, dst_q, dst_qneg)

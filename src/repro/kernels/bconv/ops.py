@@ -5,6 +5,7 @@ from functools import lru_cache
 
 import jax.numpy as jnp
 import numpy as np
+from jax.custom_batching import custom_vmap
 
 from repro.core.rns import RNSContext
 from repro.kernels.bconv.bconv import bconv_pallas
@@ -51,20 +52,49 @@ def _consts(rns_id, src, dst):
 _RNS_REGISTRY: dict[int, RNSContext] = {}
 
 
+@lru_cache(maxsize=None)
+def _bconv_dispatch(rns_id, src, dst, block, interpret):
+    """Rank-polymorphic BConv dispatch + ``custom_vmap`` rule, cached.
+
+    Leading batch dims fold into the kernel grids (batch-major rows,
+    constants read via ``%`` index maps) — the vmap rule re-invokes the
+    same dispatch on the batched operand, so nothing is replicated."""
+    c = _consts(rns_id, src, dst)
+    ld = len(dst)
+    # numpy (NOT jnp) constants: the closure is cached across traces, so
+    # captured values must never be tracers.
+    consts = (
+        c.qhat_inv_mont, c.src_q, c.src_qneg, c.qhat_mod_mont,
+        c.dst_q, c.dst_qneg,
+    )
+
+    def dispatch(x):
+        n = x.shape[-1]
+        y = bconv_pallas(
+            x.reshape((-1, n)), *consts, block=block, interpret=interpret,
+        )
+        return y.reshape(x.shape[:-2] + (ld, n))
+
+    fn = custom_vmap(dispatch)
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, x):
+        del axis_size, in_batched  # batch axis is at the front: fold it
+        return dispatch(x), True
+
+    return fn
+
+
 def bconv_kernel(x, src, dst, rns: RNSContext, block: int = 0,
                  interpret: bool | None = None):
-    """(ls, N) uint32 -> (ld, N) uint32 via the Pallas kernel."""
+    """(..., ls, N) uint32 -> (..., ld, N) uint32 via the Pallas kernel.
+    ``jax.vmap``-safe via a ``custom_vmap`` rule."""
     if interpret is None:
         interpret = default_interpret()
     _RNS_REGISTRY[id(rns)] = rns
-    c = _consts(id(rns), tuple(src), tuple(dst))
-    return bconv_pallas(
-        x.astype(jnp.uint32),
-        jnp.asarray(c.qhat_inv_mont), jnp.asarray(c.src_q),
-        jnp.asarray(c.src_qneg), jnp.asarray(c.qhat_mod_mont),
-        jnp.asarray(c.dst_q), jnp.asarray(c.dst_qneg),
-        block=block, interpret=interpret,
-    )
+    return _bconv_dispatch(
+        id(rns), tuple(src), tuple(dst), int(block), bool(interpret)
+    )(x.astype(jnp.uint32))
 
 
 def bconv_oracle(x, src, dst, rns: RNSContext):

@@ -40,31 +40,36 @@ def _fused_ip_kernel(d_ref, k_ref, pt_ref, q_ref, qneg_ref,
 
 def fused_ip_pallas(digits, evk_mont, pt_mont, q, qneg,
                     *, interpret: bool = True):
-    """digits: (dnum, l, N) u32; evk_mont: (dnum, 2, l, N) u32 Montgomery;
-    pt_mont: (l, N) u32 Montgomery or None; q/qneg: (l, 1) u32.
-    Returns (acc0, acc1), each (l, N) u32."""
-    dnum, l, n = digits.shape
+    """digits: (dnum, B*l, N) u32, batch-major rows; evk_mont: (dnum, 2,
+    l, N) u32 Montgomery; pt_mont: (l, N) u32 Montgomery or None;
+    q/qneg: (l, 1) u32.  Returns (acc0, acc1), each (B*l, N) u32.
+
+    B is inferred from the row count; batched rows read the (unbatched)
+    evk/pt/modulus operands via ``% l`` index maps.
+    """
+    dnum, rows, n = digits.shape
+    l = q.shape[0]
     with_pt = pt_mont is not None
     if pt_mont is None:
         pt_mont = jnp.zeros((l, n), dtype=jnp.uint32)
     kernel = functools.partial(_fused_ip_kernel, dnum=dnum, with_pt=with_pt)
     return pl.pallas_call(
         kernel,
-        grid=(l,),
+        grid=(rows,),
         in_specs=[
             pl.BlockSpec((dnum, 1, n), lambda r: (0, r, 0)),
-            pl.BlockSpec((dnum, 2, 1, n), lambda r: (0, 0, r, 0)),
-            pl.BlockSpec((1, n), lambda r: (r, 0)),
-            pl.BlockSpec((1, 1), lambda r: (r, 0)),
-            pl.BlockSpec((1, 1), lambda r: (r, 0)),
+            pl.BlockSpec((dnum, 2, 1, n), lambda r, l=l: (0, 0, r % l, 0)),
+            pl.BlockSpec((1, n), lambda r, l=l: (r % l, 0)),
+            pl.BlockSpec((1, 1), lambda r, l=l: (r % l, 0)),
+            pl.BlockSpec((1, 1), lambda r, l=l: (r % l, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, n), lambda r: (r, 0)),
             pl.BlockSpec((1, n), lambda r: (r, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((l, n), jnp.uint32),
-            jax.ShapeDtypeStruct((l, n), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, n), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, n), jnp.uint32),
         ],
         interpret=interpret,
     )(digits, evk_mont, pt_mont, q, qneg)

@@ -1,8 +1,11 @@
 """jit'd wrapper for the fused IP kernel."""
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax.numpy as jnp
 import numpy as np
+from jax.custom_batching import custom_vmap
 
 from repro.kernels.fused_ip.fused_ip import fused_ip_pallas
 from repro.kernels.fused_ip import ref as _ref
@@ -21,15 +24,56 @@ def _mont(arr: np.ndarray, q: np.ndarray) -> np.ndarray:
     return out
 
 
+@lru_cache(maxsize=None)
+def _ip_dispatch(with_pt: bool, interpret: bool):
+    """Rank-polymorphic fused-IP dispatch + ``custom_vmap`` rule.
+
+    Leading batch dims on ``digits`` fold into the kernel's row/grid
+    axis (batch-major, ``% l`` index maps for the unbatched evk/pt/
+    modulus operands).  Only the digits operand may carry a vmap axis —
+    evk, plaintext and moduli are shared per-plan constants."""
+
+    def dispatch(digits, evk, pt, q, qneg):
+        l = q.shape[0]
+        n = digits.shape[-1]
+        dnum = digits.shape[-3]
+        lead = digits.shape[:-3]
+        d = digits.reshape((-1,) + digits.shape[-3:])      # (B, dnum, l, n)
+        d = jnp.moveaxis(d, 0, 1).reshape(dnum, -1, n)     # (dnum, B*l, n)
+        a0, a1 = fused_ip_pallas(
+            d, evk, pt if with_pt else None, q, qneg, interpret=interpret,
+        )
+        return a0.reshape(lead + (l, n)), a1.reshape(lead + (l, n))
+
+    fn = custom_vmap(dispatch)
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, digits, evk, pt, q, qneg):
+        del axis_size
+        if any(in_batched[1:]):
+            raise NotImplementedError(
+                "fused_ip: only the digits operand may be vmapped; evk/"
+                "plaintext/moduli are per-plan constants")
+        return dispatch(digits, evk, pt, q, qneg), (True, True)
+
+    return fn
+
+
 def fused_ip_mont(digits, evk_mont, pt_mont, q, qneg,
                   interpret: bool | None = None):
     """Deployment-shaped entry: evk/pt are ALREADY Montgomery uint32
     (stored pre-converted, e.g. by the keyswitch engine's per-context
-    cache); digits stay normal-form.  q/qneg: (l, 1) uint32."""
+    cache); digits stay normal-form, shape (..., dnum, l, N) — leading
+    batch dims (or a ``jax.vmap`` axis) are folded into the kernel grid.
+    q/qneg: (l, 1) uint32."""
     if interpret is None:
         interpret = default_interpret()
-    return fused_ip_pallas(
-        digits, evk_mont, pt_mont, q, qneg, interpret=interpret,
+    with_pt = pt_mont is not None
+    if pt_mont is None:
+        pt_mont = jnp.zeros((q.shape[0], digits.shape[-1]),
+                            dtype=jnp.uint32)
+    return _ip_dispatch(with_pt, bool(interpret))(
+        digits, evk_mont, pt_mont, q, qneg
     )
 
 

@@ -1,0 +1,1 @@
+"""Fused Pallas ModUp kernel: INTT -> BConv -> NTT in one pallas_call."""

@@ -1,0 +1,107 @@
+"""Fused Pallas ModUp kernel: INTT -> BConv reduce -> NTT, one call per digit.
+
+The paper's xPU win is keeping ModUp's three phases on-chip; the op-by-op
+backend instead round-trips every intermediate (INTT output, BConv scale,
+BConv reduce) through HBM.  This kernel executes the whole digit in ONE
+``pallas_call``:
+
+  * grid = (B * ld,) walks the destination limbs (ld = extended-basis
+    size), batch-major — limb ``s`` serves batch element ``s // ld``;
+  * on each batch element's FIRST step (``s % ld == 0``) the digit's
+    ``ls`` source limbs are INTT'd into a persistent VMEM scratch
+    ``(ls, N)``.  The BConv per-limb scale ``qhat_inv_i`` is FOLDED into
+    the INTT post-twist table (one Montgomery multiply already applies
+    ``psi^{-i} * n^{-1}``; composing ``* qhat_inv_i`` is free), so the
+    BConvU scale pass disappears entirely;
+  * every step then tree-reduces the scratch against one column of the
+    Montgomery ``qhat_i mod d_j`` constants and runs the forward NTT of
+    that single destination limb — reusing the NTT kernel's trace-time
+    butterfly bodies (``_fwd_body`` / ``_inv_body``).
+
+No per-phase intermediate ever reaches HBM: the scratch persists across
+sequential grid steps (TPU grids are sequential per core; interpret mode
+matches).  VMEM residency at logN=16 is (4*ls + 3) rows of 256 KB —
+~7 MB at alpha = 6, well under the 16 MB budget.
+
+Domain bridging stays OUTSIDE the kernel (engine side): inputs are
+bit-reversed eval order, outputs bit-reversed eval order, exactly like
+``kernels/ntt``.  Data is normal-form uint32, constants Montgomery-form
+(see ``kernels.modops``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.modops import add_mod, mont_mul
+from repro.kernels.ntt.ntt import _fwd_body, _inv_body
+
+
+def _modup_kernel(x_ref, tsc_ref, twi_ref, sq_ref, sqn_ref,
+                  c_ref, twf_ref, twtf_ref, dq_ref, dqn_ref,
+                  o_ref, t_ref, *, ls: int, ld: int, logn: int):
+    s = pl.program_id(0)
+
+    @pl.when(s % ld == 0)
+    def _intt_sources():
+        # Phase 1 (once per batch element): INTT every source limb into
+        # the persistent scratch, post-twisted by psi^{-i} n^{-1} qhat_inv
+        # — phases 1 and 2a of ModUp in one Montgomery pass each.
+        for i in range(ls):
+            q = sq_ref[i, 0]
+            qn = sqn_ref[i, 0]
+            t_ref[i, :] = _inv_body(
+                x_ref[i, :], tsc_ref[i, :], twi_ref[i, :], q, qn, logn
+            )
+
+    # Phase 2b: adder-tree reduce into destination limb s % ld.
+    d = dq_ref[0, 0]
+    dn = dqn_ref[0, 0]
+    acc = mont_mul(t_ref[0, :], c_ref[0, 0], d, dn)
+    for i in range(1, ls):
+        acc = add_mod(acc, mont_mul(t_ref[i, :], c_ref[i, 0], d, dn), d)
+    # Phase 3: forward NTT of the new limb, straight out of registers.
+    o_ref[0, :] = _fwd_body(acc, twf_ref[0, :], twtf_ref[0, :], d, dn, logn)
+
+
+def modup_pallas(x, twist_i_scaled, tw_i, src_q, src_qneg,
+                 c_mont, twist_f, tw_f, dst_q, dst_qneg,
+                 *, logn: int, interpret: bool = True):
+    """x: (B*ls, N) uint32 bit-reversed eval -> (B*ld, N) bit-reversed
+    eval under the destination basis (B inferred from the row count).
+
+    twist_i_scaled/tw_i: (ls, N) Montgomery INTT tables with the BConv
+    scale folded into the post-twist; c_mont: (ls, ld) Montgomery
+    ``qhat_i mod d_j``; twist_f/tw_f: (ld, N) Montgomery NTT tables;
+    src_q/src_qneg: (ls, 1); dst_q/dst_qneg: (ld, 1).
+    """
+    ls, n = twist_i_scaled.shape
+    ld = tw_f.shape[0]
+    assert n == 1 << logn
+    b = x.shape[0] // ls
+    kernel = functools.partial(_modup_kernel, ls=ls, ld=ld, logn=logn)
+    return pl.pallas_call(
+        kernel,
+        grid=(b * ld,),
+        in_specs=[
+            pl.BlockSpec((ls, n), lambda s, ld=ld: (s // ld, 0)),
+            pl.BlockSpec((ls, n), lambda s: (0, 0)),
+            pl.BlockSpec((ls, n), lambda s: (0, 0)),
+            pl.BlockSpec((ls, 1), lambda s: (0, 0)),
+            pl.BlockSpec((ls, 1), lambda s: (0, 0)),
+            pl.BlockSpec((ls, 1), lambda s, ld=ld: (0, s % ld)),
+            pl.BlockSpec((1, n), lambda s, ld=ld: (s % ld, 0)),
+            pl.BlockSpec((1, n), lambda s, ld=ld: (s % ld, 0)),
+            pl.BlockSpec((1, 1), lambda s, ld=ld: (s % ld, 0)),
+            pl.BlockSpec((1, 1), lambda s, ld=ld: (s % ld, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * ld, n), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((ls, n), jnp.uint32)],
+        interpret=interpret,
+    )(x, twist_i_scaled, tw_i, src_q, src_qneg,
+      c_mont, twist_f, tw_f, dst_q, dst_qneg)

@@ -1,0 +1,141 @@
+"""jit'd wrapper, constants, and vmap rule for the fused ModUp kernel."""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+from jax.custom_batching import custom_vmap
+
+from repro.core.rns import RNSContext
+from repro.kernels.modops import default_interpret, to_mont_host
+from repro.kernels.modup import ref as _ref
+from repro.kernels.modup.modup import modup_pallas
+from repro.kernels.ntt.ops import NTTKernelTables
+
+
+class ModUpDigitConsts:
+    """Per-(source digit, destination basis) kernel tables.
+
+    The BConv per-limb scale ``qhat_inv_i`` is folded into the INTT
+    post-twist here, on the host, in exact object-int arithmetic — the
+    kernel then needs no scale pass at all.  Normal-form copies feed the
+    uint64 oracle."""
+
+    def __init__(self, rns: RNSContext, tabs: NTTKernelTables,
+                 src: tuple[int, ...], dst: tuple[int, ...]):
+        qhat_inv, qhat_mod = rns.bconv_consts(tuple(src), tuple(dst))
+        rs = tabs.rows(tuple(src))
+        rd = tabs.rows(tuple(dst))
+        ls, ld = len(src), len(dst)
+        n = 1 << tabs.logn
+
+        scaled = np.empty((ls, n), dtype=np.uint64)
+        for i in range(ls):
+            q = int(src[i])
+            scaled[i] = (
+                tabs.twist_i[rs[i]].astype(object) * int(qhat_inv[i]) % q
+            ).astype(np.uint64)
+        self.twist_i_scaled = scaled
+        self.twist_i_scaled_m = np.stack(
+            [to_mont_host(scaled[i], int(src[i])) for i in range(ls)]
+        )
+        self.tw_i_m = tabs.tw_i_m[rs]
+        self.src_q = tabs.q[rs]
+        self.src_qneg = tabs.qinv[rs]
+        self.qhat_mod = qhat_mod
+        self.c_mont = np.stack([
+            np.array(
+                [int(to_mont_host(np.array([qhat_mod[i, j]]),
+                                  int(dst[j]))[0])
+                 for j in range(ld)],
+                dtype=np.uint32,
+            )
+            for i in range(ls)
+        ])
+        self.twist_f_m = tabs.twist_f_m[rd]
+        self.tw_f_m = tabs.tw_f_m[rd]
+        self.dst_q = tabs.q[rd]
+        self.dst_qneg = tabs.qinv[rd]
+        # normal-form tables for the oracle
+        self.tw_i = tabs.tw_i[rs]
+        self.twist_f = tabs.twist_f[rd]
+        self.tw_f = tabs.tw_f[rd]
+        self.logn = tabs.logn
+
+
+_REGISTRY: dict[tuple, tuple] = {}
+
+
+def _admit(rns: RNSContext, tabs: NTTKernelTables) -> tuple:
+    key = (id(rns), id(tabs))
+    _REGISTRY[key] = (rns, tabs)
+    return key
+
+
+@lru_cache(maxsize=None)
+def _consts(reg_key, src, dst) -> ModUpDigitConsts:
+    rns, tabs = _REGISTRY[reg_key]
+    return ModUpDigitConsts(rns, tabs, src, dst)
+
+
+@lru_cache(maxsize=None)
+def _dispatch(reg_key, src, dst, interpret):
+    """Rank-polymorphic dispatch + ``custom_vmap`` rule, cached so every
+    trace of the same (digit, basis, backend) reuses ONE callable.
+
+    The dispatch flattens any leading batch dims into the kernel's grid
+    axis (batch-major rows) — zero extra materialization — so the vmap
+    rule simply re-invokes it on the batched operand."""
+    c = _consts(reg_key, src, dst)
+    ld = len(dst)
+    # numpy (NOT jnp) constants: the closure is cached across traces, so
+    # captured values must never be tracers — numpy lifts into each
+    # trace as a fresh constant.
+    tables = (
+        c.twist_i_scaled_m, c.tw_i_m, c.src_q, c.src_qneg, c.c_mont,
+        c.twist_f_m, c.tw_f_m, c.dst_q, c.dst_qneg,
+    )
+    logn = c.logn
+
+    def dispatch(x):
+        n = x.shape[-1]
+        y = modup_pallas(
+            x.reshape((-1, n)), *tables, logn=logn, interpret=interpret
+        )
+        return y.reshape(x.shape[:-2] + (ld, n))
+
+    fn = custom_vmap(dispatch)
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, x):
+        del axis_size, in_batched  # batch axis is at the front: fold it
+        return dispatch(x), True
+
+    return fn
+
+
+def modup_digit(x, src, dst, tabs: NTTKernelTables, rns: RNSContext,
+                interpret: bool | None = None):
+    """(..., ls, N) uint32 bit-reversed eval -> (..., ld, N) bit-reversed
+    eval: ONE fused pallas_call (INTT -> scaled tree-reduce -> NTT) per
+    digit, VMEM-resident across all three phases.  ``jax.vmap``-safe."""
+    if interpret is None:
+        interpret = default_interpret()
+    key = _admit(rns, tabs)
+    return _dispatch(key, tuple(src), tuple(dst), bool(interpret))(
+        x.astype(jnp.uint32)
+    )
+
+
+def modup_digit_oracle(x, src, dst, tabs: NTTKernelTables,
+                       rns: RNSContext):
+    """Exact uint64 mirror of :func:`modup_digit` (same phase fusion)."""
+    key = _admit(rns, tabs)
+    c = _consts(key, tuple(src), tuple(dst))
+    return _ref.modup_digit_ref(
+        x, jnp.asarray(c.twist_i_scaled), jnp.asarray(c.tw_i),
+        jnp.asarray(c.src_q.astype(np.uint64)), jnp.asarray(c.qhat_mod),
+        jnp.asarray(c.twist_f), jnp.asarray(c.tw_f),
+        jnp.asarray(c.dst_q.astype(np.uint64)),
+    )

@@ -1,0 +1,31 @@
+"""Pure-jnp uint64 oracle for the fused ModUp kernel.
+
+Mirrors the kernel's phase structure exactly: INTT with the BConv scale
+folded into the post-twist, per-destination-limb tree reduce, forward
+NTT — all in exact uint64 ``%`` arithmetic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ntt.ref import ntt_fwd_ref, ntt_inv_ref
+
+
+def modup_digit_ref(x, twist_i_scaled, tw_i, src_q, qhat_mod,
+                    twist_f, tw_f, dst_q):
+    """x: (ls, N) uint32 bit-reversed eval; tables NORMAL form uint64;
+    src_q/dst_q: (ls, 1)/(ld, 1).  Returns (ld, N) uint32 bit-reversed
+    eval under the destination basis."""
+    t = ntt_inv_ref(x, twist_i_scaled, tw_i, src_q).astype(jnp.uint64)
+    qhat_mod = qhat_mod.astype(jnp.uint64)
+    dq = dst_q.astype(jnp.uint64).reshape(-1)
+    ld = qhat_mod.shape[1]
+    outs = []
+    for j in range(ld):
+        d = dq[j]
+        acc = jnp.zeros(x.shape[1], dtype=jnp.uint64)
+        for i in range(x.shape[0]):
+            acc = (acc + (t[i] * qhat_mod[i, j]) % d) % d
+        outs.append(acc)
+    y = jnp.stack(outs).astype(jnp.uint32)
+    return ntt_fwd_ref(y, twist_f, tw_f, dst_q)

@@ -69,24 +69,28 @@ def _ntt_kernel(x_ref, twist_ref, tw_ref, q_ref, qinv_ref, o_ref,
 
 def ntt_pallas(x, twist, tw, q, qinv, *, logn: int, inverse: bool,
                interpret: bool = True):
-    """x: (l, N) uint32; twist/tw: (l, N) uint32 Montgomery; q/qinv: (l, 1).
+    """x: (B*l, N) uint32, batch-major rows; twist/tw: (l, N) uint32
+    Montgomery; q/qinv: (l, 1).  B is inferred from the row count.
 
-    Grid walks limbs; each program transforms one polynomial in VMEM.
+    Grid walks all B*l rows; each program transforms one polynomial in
+    VMEM, reading its limb's tables via a ``% l`` index map — batching
+    costs no table replication.
     """
-    l, n = x.shape
+    rows, n = x.shape
+    l = twist.shape[0]
     assert n == 1 << logn
     kernel = functools.partial(_ntt_kernel, logn=logn, inverse=inverse)
     return pl.pallas_call(
         kernel,
-        grid=(l,),
+        grid=(rows,),
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, l=l: (i % l, 0)),
+            pl.BlockSpec((1, n), lambda i, l=l: (i % l, 0)),
+            pl.BlockSpec((1, 1), lambda i, l=l: (i % l, 0)),
+            pl.BlockSpec((1, 1), lambda i, l=l: (i % l, 0)),
         ],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.uint32),
         interpret=interpret,
     )(x, twist, tw, q, qinv)

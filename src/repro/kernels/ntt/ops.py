@@ -5,6 +5,7 @@ from functools import lru_cache
 
 import jax.numpy as jnp
 import numpy as np
+from jax.custom_batching import custom_vmap
 
 from repro.core.rns import RNSContext
 from repro.kernels.modops import default_interpret, qinv_neg_host, to_mont_host
@@ -70,39 +71,63 @@ def tables_for(params) -> NTTKernelTables:
     return NTTKernelTables(RNSContext(params))
 
 
+@lru_cache(maxsize=None)
+def _ntt_dispatch(tables: NTTKernelTables, rows: tuple, inverse: bool,
+                  interpret: bool):
+    """Rank-polymorphic NTT dispatch + ``custom_vmap`` rule, cached per
+    (tables, limb rows, direction, backend).
+
+    Leading batch dims fold into the kernel's row/grid axis; the limb
+    tables are read through ``% l`` index maps, so a ``jax.vmap``-batched
+    transform materializes nothing — the vmap rule just re-invokes the
+    same dispatch on the batched operand (nesting-safe)."""
+    r = np.array(rows)
+    # numpy (NOT jnp) constants: the closure is cached across traces, so
+    # captured values must never be tracers.
+    twist = (tables.twist_i_m if inverse else tables.twist_f_m)[r]
+    tw = (tables.tw_i_m if inverse else tables.tw_f_m)[r]
+    q = tables.q[r]
+    qinv = tables.qinv[r]
+
+    def dispatch(x):
+        y = ntt_pallas(
+            x.reshape((-1, x.shape[-1])), twist, tw, q, qinv,
+            logn=tables.logn, inverse=inverse, interpret=interpret,
+        )
+        return y.reshape(x.shape)
+
+    fn = custom_vmap(dispatch)
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, x):
+        del axis_size, in_batched  # batch axis is at the front: fold it
+        return dispatch(x), True
+
+    return fn
+
+
 def ntt_fwd(x, primes, tables: NTTKernelTables,
             interpret: bool | None = None):
-    """(l, N) uint32 natural coeffs -> bit-reversed eval order.
+    """(..., l, N) uint32 natural coeffs -> bit-reversed eval order.
 
     ``primes`` may contain duplicates (batched multi-poly transforms
     tile the limb axis).  ``interpret=None`` auto-detects the backend.
+    ``jax.vmap``-safe via a ``custom_vmap`` rule.
     """
     if interpret is None:
         interpret = default_interpret()
-    r = tables.rows(tuple(primes))
-    return ntt_pallas(
-        x.astype(jnp.uint32),
-        jnp.asarray(tables.twist_f_m[r]),
-        jnp.asarray(tables.tw_f_m[r]),
-        jnp.asarray(tables.q[r]),
-        jnp.asarray(tables.qinv[r]),
-        logn=tables.logn, inverse=False, interpret=interpret,
-    )
+    rows = tuple(int(i) for i in tables.rows(tuple(primes)))
+    return _ntt_dispatch(tables, rows, False, bool(interpret))(
+        x.astype(jnp.uint32))
 
 
 def ntt_inv(x, primes, tables: NTTKernelTables,
             interpret: bool | None = None):
     if interpret is None:
         interpret = default_interpret()
-    r = tables.rows(tuple(primes))
-    return ntt_pallas(
-        x.astype(jnp.uint32),
-        jnp.asarray(tables.twist_i_m[r]),
-        jnp.asarray(tables.tw_i_m[r]),
-        jnp.asarray(tables.q[r]),
-        jnp.asarray(tables.qinv[r]),
-        logn=tables.logn, inverse=True, interpret=interpret,
-    )
+    rows = tuple(int(i) for i in tables.rows(tuple(primes)))
+    return _ntt_dispatch(tables, rows, True, bool(interpret))(
+        x.astype(jnp.uint32))
 
 
 def ntt_fwd_oracle(x, primes, tables: NTTKernelTables):

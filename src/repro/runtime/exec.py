@@ -227,8 +227,12 @@ class ProgramExecutor:
         ctx = self.ctx
         label, out_id = self._step_label(compiled, step)
         before = ctx.counters.snapshot()
+        eng = ctx.engine if ctx.use_engine else None
         with obs.span(f"exec.step.{label}", out=out_id, batch=batch,
-                      level=getattr(step, "level", None)) as sp:
+                      level=getattr(step, "level", None),
+                      backend=eng.backend if eng else "none",
+                      interpret=bool(eng and eng.backend == "pallas"
+                                     and eng.interpret)) as sp:
             self._exec_step(compiled, step, values, digits, outputs,
                             inputs, batch, validate)
             out = values.get(out_id)

@@ -225,6 +225,28 @@ def _up_slice_weights(v, hw: HWConfig, groups: int) -> list[float]:
     return [w[g % len(legs)] / total for g in range(groups)]
 
 
+def _down_slice_weights(v, hw: HWConfig, groups: int) -> list[float]:
+    """Per-slice weights for the down-phase xPU work.
+
+    Mirror of :func:`_up_slice_weights` for the ModDown side: the IP
+    accumulation streams back digit-by-digit in the same group order the
+    ModUp went up, so slice g's post-link xPU work (NTT back + BConv +
+    subtract/scale of digit g's base limbs) is weighted by
+    ``v.moddown_legs`` — a short last decomposition group drains
+    proportionally faster.  Identical to the uniform split when digits
+    are uniform; falls back to it when legs are unavailable or do not
+    tile the groups."""
+    legs = getattr(v, "moddown_legs", ())
+    if not legs or groups % len(legs):
+        return [1.0 / groups] * groups
+    w = [ntt / hw.ntt_tput + bc / hw.bconv_tput + ewo / hw.ewe_tput
+         for ntt, bc, ewo in legs]
+    total = sum(w) * (groups // len(legs))
+    if total <= 0.0:
+        return [1.0 / groups] * groups
+    return [w[g % len(legs)] / total for g in range(groups)]
+
+
 def build_block_tasks(graph: _TaskGraph, block_idx: int, times: dict,
                       v, hw: HWConfig,
                       prev_outputs: list[Task],
@@ -243,6 +265,7 @@ def build_block_tasks(graph: _TaskGraph, block_idx: int, times: dict,
     groups = pipeline_groups(times["dnum"], pipelined)
     f_up = _xpu_phase_split(v, hw)
     up_w = _up_slice_weights(v, hw, groups)
+    down_w = _down_slice_weights(v, hw, groups)
 
     outputs: list[Task] = []
     for g in range(groups):
@@ -276,7 +299,7 @@ def build_block_tasks(graph: _TaskGraph, block_idx: int, times: dict,
             xmu_deps = ev or (up_chain[-1:] if up_chain else deps)
         down_chain = graph.chain(
             [(XMU, t_xmu / groups), (LINK, t_down / groups),
-             (XPU, (1.0 - f_up) * t_xpu / groups)],
+             (XPU, (1.0 - f_up) * t_xpu * down_w[g])],
             xmu_deps, f"b{block_idx}.g{g}.down", block_idx, g)
         last = (down_chain or up_chain or ev)
         outputs.append(last[-1] if last else

@@ -355,6 +355,49 @@ def test_perfetto_trace_schema(tmp_path, octx, oprog):
             assert ev["args"]["parent_span"] == run["args"]["span_id"]
 
 
+def test_kernel_dispatch_events_and_backend_attrs(octx, oprog):
+    """Engine entry points emit ``engine.kernel_dispatch`` events
+    (backend, fused vs op-by-op ModUp, interpret mode) and executor
+    step spans carry the backend they dispatched to."""
+    ex = ProgramExecutor(octx)
+    ct = octx.encrypt(np.random.default_rng(3).normal(
+        size=octx.params.num_slots))
+    obs.enable()
+    ex.run(oprog, {"x": ct})
+    obs.disable()
+    steps = obs.TRACER.spans("exec.step.*")
+    assert steps
+    assert all(s.attrs["backend"] == "jnp"
+               and s.attrs["interpret"] is False for s in steps)
+    evs = [e for s in obs.TRACER.spans() for e in s.events
+           if e[0] == "engine.kernel_dispatch"]
+    evs += [(n, ts, a) for n, ts, _t, a in obs.TRACER.instants
+            if n == "engine.kernel_dispatch"]
+    assert evs, "engine dispatch emitted no kernel_dispatch events"
+    for _, _, attrs in evs:
+        assert attrs["backend"] == "jnp"
+        assert attrs["modup"] == "op-by-op"
+        assert attrs["interpret"] is False
+
+
+def test_kernel_dispatch_event_pallas_fused():
+    """On backend='pallas' the dispatch event reports the fused ModUp
+    kernel and whether the Pallas interpreter is in use."""
+    p = CKKSParams(logN=8, L=3, alpha=2, k=2, q_bits=29, scale_bits=29)
+    ctx = CKKSContext(p, seed=5, backend="pallas")
+    ct = ctx.encrypt(np.random.default_rng(0).normal(size=p.num_slots))
+    obs.enable()
+    ctx.engine.modup(ct.c1, ct.level)
+    obs.disable()
+    evs = [(n, a) for n, _ts, _t, a in obs.TRACER.instants
+           if n == "engine.kernel_dispatch"]
+    assert evs
+    name, attrs = evs[0]
+    assert attrs["backend"] == "pallas"
+    assert attrs["modup"] == "fused"
+    assert attrs["interpret"] == ctx.engine.interpret
+
+
 def test_validate_failure_emits_span_event(octx, oprog, monkeypatch):
     """A ``validate=True`` block-boundary failure emits a span event
     carrying the failing block's step volumes before the typed error

@@ -13,7 +13,9 @@ Covers the relin acceptance gates:
     bit-exact under ``exact=True``, ``MultiRelinStep`` merges the
     giant-step product sums under ``exact=False`` at fewer ModDowns,
     and predicted-vs-executed reconciliation stays exact
-  * the pallas-vmap gate raises the documented error on batched paths
+  * batched relin/rotation paths on backend='pallas' are bit-exact with
+    the jnp backend (the kernel suite is vmap-compatible via
+    ``custom_vmap`` rules; there is no batched-pallas gate any more)
 """
 import numpy as np
 import pytest
@@ -367,47 +369,78 @@ def test_multi_relin_pallas_parity():
         assert np.array_equal(np.asarray(got[1]), np.asarray(exp[1]))
 
 
-# ----------------------- pallas vmap gate --------------------------------
+# ------------------- batched pallas parity -------------------------------
+# These replace the former pallas-vmap gate tests: the kernel suite is
+# vmap-compatible (custom_vmap rules fold the batch into the kernel
+# grids), so every *_batched engine entry runs on backend='pallas' and
+# must be bit-exact with the jnp backend.
 
-def test_pallas_batched_relin_gate():
-    """backend='pallas' cannot vmap-batch: the gate raises the
-    documented NotImplementedError on every batched relin entry."""
+@pytest.fixture(scope="module")
+def _pallas_pair():
     p = CKKSParams(logN=8, L=3, alpha=2, k=2, q_bits=29, scale_bits=26)
-    ctx = CKKSContext(p, seed=5, backend="pallas")
-    rng = np.random.default_rng(1)
-    nh = p.num_slots
-    a = ctx.encrypt(rng.normal(size=nh))
-    lvl = a.level
+    return {b: CKKSContext(p, seed=5, backend=b)
+            for b in ("jnp", "pallas")}
+
+
+def _batched_tensor_square(ctx, msgs):
+    import jax.numpy as jnp
+    cts = [ctx.encrypt(m) for m in msgs]
+    lvl = cts[0].level
     mods = ctx.pc.mods(ctx.chain(lvl))
-    d0, d1, d2 = tensor_product(a, a, mods)
-    with pytest.raises(NotImplementedError, match="vmap"):
-        ctx.engine.relin_batched(d0[None], d1[None], d2[None],
-                                 ctx.keys.mult_key, lvl)
-    with pytest.raises(NotImplementedError, match="pallas"):
-        ctx.engine.multi_relin_sum_batched(
-            [d0[None]], [d1[None]], [d2[None]], ctx.keys.mult_key, lvl)
+    trips = [tensor_product(a, a, mods) for a in cts]
+    return tuple(jnp.stack([t[i] for t in trips]) for i in range(3)), lvl
 
 
-@pytest.mark.skip(reason="pallas kernels are not vmap-compatible yet — "
-                         "ROADMAP follow-on 'make the Pallas kernel "
-                         "suite vmap-compatible'; executable anchor for "
-                         "batched relin on backend='pallas'")
-def test_pallas_batched_relin_followon():
-    """When the Pallas kernel suite learns vmap, unskip: batched relin
-    on backend='pallas' must be bit-exact with the jnp backend."""
-    p = CKKSParams(logN=8, L=3, alpha=2, k=2, q_bits=29, scale_bits=26)
-    ctx_p = CKKSContext(p, seed=5, backend="pallas")
-    ctx_j = CKKSContext(p, seed=5, backend="jnp")
+def test_pallas_batched_rotation_parity(_pallas_pair):
+    """Batched rotation (apply_galois_batched -> full keyswitch) on
+    backend='pallas' is bit-exact with the jnp backend."""
+    import jax.numpy as jnp
     rng = np.random.default_rng(1)
-    nh = p.num_slots
-    a_p = ctx_p.encrypt(rng.normal(size=nh))
-    a_j = ctx_j.encrypt(rng.normal(size=nh))
-    lvl = a_p.level
-    d0p, d1p, d2p = tensor_product(a_p, a_p, ctx_p.pc.mods(ctx_p.chain(lvl)))
-    d0j, d1j, d2j = tensor_product(a_j, a_j, ctx_j.pc.mods(ctx_j.chain(lvl)))
-    got = ctx_p.engine.relin_batched(d0p[None], d1p[None], d2p[None],
-                                     ctx_p.keys.mult_key, lvl)
-    exp = ctx_j.engine.relin_batched(d0j[None], d1j[None], d2j[None],
-                                     ctx_j.keys.mult_key, lvl)
-    assert np.array_equal(np.asarray(got[0]), np.asarray(exp[0]))
-    assert np.array_equal(np.asarray(got[1]), np.asarray(exp[1]))
+    nh = next(iter(_pallas_pair.values())).params.num_slots
+    msgs = [rng.normal(size=nh) * 0.3 for _ in range(3)]
+    outs = {}
+    for b, ctx in _pallas_pair.items():
+        cts = [ctx.encrypt(m) for m in msgs]
+        c0b = jnp.stack([c.c0 for c in cts])
+        c1b = jnp.stack([c.c1 for c in cts])
+        g = ctx.pc.rns.galois_for_rotation(2)
+        outs[b] = ctx.engine.apply_galois_batched(
+            c0b, c1b, g, ctx.keys.rot_key(2), cts[0].level)
+    for got, exp in zip(outs["pallas"], outs["jnp"]):
+        assert np.array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_pallas_batched_relin_parity(_pallas_pair):
+    """Batched relin on backend='pallas' (fused-IP under vmap) is
+    bit-exact with the jnp backend, with and without cached digits."""
+    rng = np.random.default_rng(1)
+    nh = next(iter(_pallas_pair.values())).params.num_slots
+    msgs = [rng.normal(size=nh) * 0.3 for _ in range(2)]
+    outs = {}
+    for b, ctx in _pallas_pair.items():
+        (d0, d1, d2), lvl = _batched_tensor_square(ctx, msgs)
+        digs = ctx.engine.modup_batched(d2, lvl)
+        outs[b] = (
+            ctx.engine.relin_batched(d0, d1, d2, ctx.keys.mult_key, lvl),
+            ctx.engine.relin_batched(d0, d1, None, ctx.keys.mult_key,
+                                     lvl, digits=digs),
+        )
+    for got, exp in zip(outs["pallas"], outs["jnp"]):
+        for g_arr, e_arr in zip(got, exp):
+            assert np.array_equal(np.asarray(g_arr), np.asarray(e_arr))
+
+
+def test_pallas_batched_multi_relin_parity(_pallas_pair):
+    """Batched multi_relin_sum (one shared ModDown across products) on
+    backend='pallas' is bit-exact with the jnp backend."""
+    rng = np.random.default_rng(3)
+    nh = next(iter(_pallas_pair.values())).params.num_slots
+    msgs = [rng.normal(size=nh) * 0.3 for _ in range(2)]
+    outs = {}
+    for b, ctx in _pallas_pair.items():
+        (d0, d1, d2), lvl = _batched_tensor_square(ctx, msgs)
+        digs = ctx.engine.modup_batched(d2, lvl)
+        outs[b] = ctx.engine.multi_relin_sum_batched(
+            [d0, d0], [d1, d1], [digs, digs], ctx.keys.mult_key, lvl)
+    for got, exp in zip(outs["pallas"], outs["jnp"]):
+        assert np.array_equal(np.asarray(got), np.asarray(exp))

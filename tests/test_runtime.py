@@ -288,3 +288,46 @@ def test_modup_legs_match_totals():
     # differing dnum blocks cannot keep a per-digit attribution
     assert (modup_volumes(6, 3, 2, 512)
             + modup_volumes(12, 3, 2, 512)).modup_legs == ()
+
+
+def test_moddown_legs_match_totals():
+    """ModDown legs follow the IP-accumulation streaming order: one
+    (ntt, bconv, ewo) leg per decomposition digit, summing exactly to
+    the block totals; a short last digit gets a shorter leg."""
+    from repro.dfg.hoist import moddown_volumes
+
+    for l in (6, 7, 12):
+        v = moddown_volumes(l, k=3, alpha=2, N=512, components=2)
+        assert len(v.moddown_legs) == -(-l // 2)
+        assert sum(n for n, _, _ in v.moddown_legs) == pytest.approx(
+            v.moddown_ntt_words)
+        assert sum(b for _, b, _ in v.moddown_legs) == pytest.approx(
+            v.moddown_bconv_macs)
+        assert sum(e for _, _, e in v.moddown_legs) == pytest.approx(
+            v.xpu_ewo_words)
+        both = v + v
+        assert len(both.moddown_legs) == len(v.moddown_legs)
+        assert both.moddown_legs[0][2] == 2 * v.moddown_legs[0][2]
+        assert v.scaled(2.0).moddown_legs[0][1] == 2 * v.moddown_legs[0][1]
+    # odd l: the last digit is short and its leg proportionally smaller
+    v7 = moddown_volumes(7, 3, 2, 512)
+    assert v7.moddown_legs[-1][1] == v7.moddown_legs[0][1] / 2
+    assert (moddown_volumes(6, 3, 2, 512)
+            + moddown_volumes(12, 3, 2, 512)).moddown_legs == ()
+
+
+def test_down_slice_weights_behavior():
+    """Uniform digits -> uniform down weights (behavior-preserving);
+    a short last digit drains faster; non-tiling groups fall back."""
+    from repro.dfg.hoist import moddown_volumes
+    from repro.sim.hw import HE2_SM
+    from repro.sim.schedule import _down_slice_weights
+
+    v = moddown_volumes(6, 3, 2, 512)        # 3 uniform digits
+    w = _down_slice_weights(v, HE2_SM, 6)
+    assert w == pytest.approx([1 / 6] * 6)
+    v7 = moddown_volumes(7, 3, 2, 512)       # short last digit
+    w7 = _down_slice_weights(v7, HE2_SM, 8)
+    assert sum(w7) == pytest.approx(1.0)
+    assert w7[3] < w7[0] and w7[7] < w7[4]
+    assert _down_slice_weights(v7, HE2_SM, 6) == pytest.approx([1 / 6] * 6)
